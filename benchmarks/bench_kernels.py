@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU; compiled on TPU) vs
+the pure-jnp oracle, plus max-abs-error per shape."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import (flash_attention, flash_decode, hlog_qmatmul,
+                           local_similarity_dist)
+from repro.kernels import ref
+from .common import time_call
+
+
+def run():
+    rows = []
+    # hlog matmul
+    for M, K, N in ((256, 256, 256), (512, 512, 512)):
+        xq = jnp.round(jax.random.normal(jax.random.PRNGKey(0), (M, K)) * 35
+                       ).clip(-127, 127)
+        wq = jnp.round(jax.random.normal(jax.random.PRNGKey(1), (K, N)) * 35
+                       ).clip(-127, 127)
+        ref_fn = jax.jit(ref.hlog_qmatmul_ref)
+        us_ref = time_call(ref_fn, xq, wq)
+        err = float(jnp.max(jnp.abs(
+            hlog_qmatmul(xq, wq, interpret=True) - ref_fn(xq, wq))))
+        rows.append((f"kernel/hlog_qmatmul/{M}x{K}x{N}", us_ref,
+                     {"max_err_vs_oracle": err, "timing": "jnp-oracle (CPU)"}))
+
+    # flash attention
+    for L in (256, 512):
+        q, k, v = (jax.random.normal(jax.random.PRNGKey(s), (1, 4, L, 64))
+                   for s in (2, 3, 4))
+        ref_fn = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c))
+        us_ref = time_call(ref_fn, q, k, v)
+        err = float(jnp.max(jnp.abs(
+            flash_attention(q, k, v, interpret=True) - ref_fn(q, k, v))))
+        rows.append((f"kernel/flash_attention/L{L}", us_ref,
+                     {"max_err_vs_oracle": round(err, 8)}))
+
+    # flash decode (one token vs a 2k cache)
+    q = jax.random.normal(jax.random.PRNGKey(6), (2, 2, 4, 64))
+    k = jax.random.normal(jax.random.PRNGKey(7), (2, 2, 2048, 64))
+    v = jax.random.normal(jax.random.PRNGKey(8), (2, 2, 2048, 64))
+    pos = jnp.asarray([2000, 511])
+    ref_fn = jax.jit(lambda a, b, c, p: ref.flash_decode_ref(a, b, c, p))
+    us_ref = time_call(ref_fn, q, k, v, pos)
+    err = float(jnp.max(jnp.abs(
+        flash_decode(q, k, v, pos, block_k=512, interpret=True)
+        - ref_fn(q, k, v, pos))))
+    rows.append(("kernel/flash_decode/S2048", us_ref,
+                 {"max_err_vs_oracle": round(err, 8)}))
+
+    # local similarity
+    spa = jax.random.normal(jax.random.PRNGKey(5), (2, 4, 64, 512))
+    ref_fn = jax.jit(lambda s: ref.local_similarity_ref(s, 8))
+    us_ref = time_call(ref_fn, spa)
+    err = float(jnp.max(jnp.abs(
+        local_similarity_dist(spa, w=8, interpret=True) - ref_fn(spa))))
+    rows.append(("kernel/local_similarity/64x512", us_ref,
+                 {"max_err_vs_oracle": round(err, 6)}))
+    return rows

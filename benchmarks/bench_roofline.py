@@ -1,0 +1,58 @@
+"""Roofline table assembly: reads results/dryrun.jsonl (written by
+repro.launch.dryrun_all) and reports the three terms + bottleneck per
+(arch x shape x mesh) cell."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun.jsonl"
+
+
+def load_cells(path=RESULTS):
+    cells = {}
+    if not Path(path).exists():
+        return cells
+    for line in Path(path).read_text().splitlines():
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+               r.get("spls", False))
+        cells[key] = r  # last write wins (re-runs supersede)
+    return cells
+
+
+def run():
+    rows = []
+    cells = load_cells()
+    if not cells:
+        return [("roofline/missing", 0.0,
+                 {"note": "run repro.launch.dryrun_all first"})]
+    n_ok = n_skip = n_err = 0
+    for (arch, shape, mesh, spls), r in sorted(cells.items()):
+        tag = f"roofline/{mesh}/{arch}/{shape}" + ("+spls" if spls else "")
+        if r.get("skipped"):
+            n_skip += 1
+            rows.append((tag, 0.0, {"skipped": r.get("reason", "")}))
+            continue
+        if "error" in r:
+            n_err += 1
+            rows.append((tag, 0.0, {"ERROR": r["error"][:120]}))
+            continue
+        n_ok += 1
+        rl = r["roofline"]
+        dom_s = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        rows.append((tag, r.get("compile_s", 0) * 1e6, {
+            "compute_s": round(rl["compute_s"], 4),
+            "memory_s": round(rl["memory_s"], 4),
+            "collective_s": round(rl["collective_s"], 4),
+            "dominant": rl["dominant"],
+            "roofline_fraction": round(rl["compute_s"] / dom_s, 4),
+            "model_flops_ratio": round(r.get("model_flops_ratio") or 0, 4),
+        }))
+    rows.append(("roofline/summary", 0.0,
+                 {"ok": n_ok, "skipped": n_skip, "errors": n_err}))
+    return rows

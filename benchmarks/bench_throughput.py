@@ -1,0 +1,38 @@
+"""Fig. 20 + Table IV: cycle-model throughput decomposition and the
+attention-level energy-efficiency comparison vs SpAtten / Sanger."""
+
+from __future__ import annotations
+
+from repro.perfmodel import (attention_level_comparison, energy_efficiency,
+                             speedup_breakdown)
+
+# paper-measured SPLS sparsity (Fig. 15 averages)
+PAPER_REDUCTIONS = {"qkv": 0.6566, "attention": 0.9465, "ffn": 0.5033}
+
+
+def run():
+    rows = []
+    # BERT-Base @ L=512 (the paper's calibration workload is L=128 D=768)
+    for L in (128, 512):
+        sb = speedup_breakdown(L, 768, 12, 3072, PAPER_REDUCTIONS)
+        rows.append((f"throughput/breakdown_L{L}", 0.0, {
+            "spls_x": round(sb["spls_speedup"], 3),
+            "progressive_x": round(sb["progressive_speedup"], 3),
+            "dynamic_x": round(sb["dynamic_speedup"], 3),
+            "end_to_end_x": round(sb["end_to_end_speedup"], 3)}))
+    rows.append(("throughput/paper_reference", 0.0, {
+        "spls_x": 1.59, "progressive_x": 1.18, "dynamic_x": 1.04,
+        "asic_vs_v100_x": 2.42, "end_to_end_vs_v100_x": 4.72}))
+
+    ee = energy_efficiency(512, 768, 12, 3072, PAPER_REDUCTIONS)
+    rows.append(("energy/end_to_end", 0.0,
+                 {k: round(v, 3) for k, v in ee.items()}))
+    rows.append(("energy/paper_reference", 0.0, {"tops_per_w": 3.27}))
+
+    ac = attention_level_comparison(512, 768, 12,
+                                    PAPER_REDUCTIONS["attention"])
+    rows.append(("energy/attention_level", 0.0,
+                 {k: round(v, 3) for k, v in ac.items()}))
+    rows.append(("energy/attention_paper_reference", 0.0, {
+        "energy_eff_gops_w": 6677, "vs_spatten": 2.95, "vs_sanger": 2.26}))
+    return rows

@@ -1,0 +1,39 @@
+"""Shared benchmark helpers: timing + the smoke-scale ESACT workload."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockCfg
+from repro.core.spls import SPLSConfig
+
+
+def time_call(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (CPU, jitted fns)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def bert_workload(L: int = 128, B: int = 4, **spls_kw) -> Tuple[ArchConfig, dict]:
+    """CPU-scale stand-in for the paper's BERT-Base benchmark setup."""
+    spls = SPLSConfig(enabled=True, k_ratio=0.12, s_threshold=0.6,
+                      f_threshold=6, window=8, causal=False, **spls_kw)
+    cfg = ArchConfig(
+        name="bert-bench", n_layers=2, d_model=128, n_heads=8, n_kv_heads=8,
+        head_dim=16, d_ff=512, vocab_size=1024,
+        period=(BlockCfg(mixer="attn"),), causal=False,
+        ffn_activation="gelu_mlp", remat=False, spls=spls)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (B, L, cfg.d_model))
+    return cfg, {"x": x}

@@ -1,0 +1,48 @@
+"""Benchmark driver -- one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only reduction quantization ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import traceback
+
+MODULES = {
+    "reduction": "Fig 15  computation reduction breakdown",
+    "quantization": "Figs 7/17/18 + Table III  HLog vs PoT vs APoT",
+    "thresholds": "Figs 16/19  s/window/f sweeps",
+    "throughput": "Fig 20 + Table IV  cycle/energy model",
+    "kernels": "Pallas kernel validation + timing",
+    "accuracy": "Sec V-B  accuracy-vs-sparsity proxy",
+    "roofline": "Dry-run roofline table (reads results/dryrun.jsonl)",
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help=f"subset of {sorted(MODULES)}")
+    args = ap.parse_args(argv)
+    names = args.only or list(MODULES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        try:
+            mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},"
+                      f"\"{json.dumps(derived, default=str)}\"")
+                sys.stdout.flush()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name}/FAILED,0,\"{traceback.format_exc(limit=3)!r}\"")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

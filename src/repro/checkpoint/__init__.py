@@ -1,0 +1,3 @@
+"""Sharded atomic checkpointing (manifest + COMMITTED marker)."""
+
+from .ckpt import cleanup_old, latest_step, restore_checkpoint, save_checkpoint

@@ -1,0 +1,133 @@
+"""Sharded checkpointing with manifest + atomic commit (no orbax).
+
+Layout of a checkpoint directory::
+
+    step_000123/
+      MANIFEST.json     # pytree structure, shapes, dtypes, step, data step
+      arrays/<leaf-id>.npy
+      COMMITTED         # written last -- a dir without it is garbage
+
+Restart safety comes from three properties:
+  * atomic commit marker -- partially written checkpoints are never loaded;
+  * the data-pipeline step is stored, so the deterministic pipeline resumes
+    exactly where it left off (no sample is seen twice or skipped);
+  * save/restore go through ``jax.device_get``/``device_put`` with the
+    caller-provided shardings, so a checkpoint written on one mesh can be
+    restored onto a different mesh (elastic re-shard on restart).
+
+At 1000+ nodes each host would write only its addressable shards; this
+single-process implementation writes full arrays but keeps the manifest
+format host-sharded-ready (leaf ids are stable pytree paths).
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "cleanup_old"]
+
+
+def _leaf_id(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return ".".join(parts) or "root"
+
+
+def save_checkpoint(base: str, step: int, tree: Any,
+                    data_step: Optional[int] = None,
+                    keep: int = 3) -> str:
+    """Write ``tree`` atomically under ``base/step_{step:09d}``."""
+    base_p = Path(base)
+    final = base_p / f"step_{step:09d}"
+    tmp = base_p / f".tmp_step_{step:09d}_{int(time.time() * 1e6)}"
+    (tmp / "arrays").mkdir(parents=True, exist_ok=True)
+
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    manifest = {"step": step, "data_step": data_step, "leaves": []}
+    for path, leaf in leaves:
+        lid = _leaf_id(path)
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(tmp / "arrays" / f"{lid}.npy", arr)
+        manifest["leaves"].append(
+            {"id": lid, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=1))
+    (tmp / "COMMITTED").write_text(str(time.time()))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    cleanup_old(base, keep)
+    return str(final)
+
+
+def latest_step(base: str) -> Optional[int]:
+    """Newest *committed* checkpoint step, or None."""
+    base_p = Path(base)
+    if not base_p.exists():
+        return None
+    steps = []
+    for d in base_p.iterdir():
+        if d.name.startswith("step_") and (d / "COMMITTED").exists():
+            steps.append(int(d.name[5:]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(base: str, tree_like: Any, step: Optional[int] = None,
+                       shardings: Any = None) -> Tuple[Any, int, Optional[int]]:
+    """Restore into the structure of ``tree_like``.
+
+    Returns (tree, step, data_step).  With ``shardings`` given, each leaf is
+    device_put with its target sharding -- this is the elastic-restart path:
+    the mesh may differ from the one that wrote the checkpoint.
+    """
+    if step is None:
+        step = latest_step(base)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint under {base}")
+    d = Path(base) / f"step_{step:09d}"
+    manifest = json.loads((d / "MANIFEST.json").read_text())
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
+                  if shardings is not None else [None] * len(flat))
+    leaves = []
+    for (path, like), shd in zip(flat, shard_flat):
+        lid = _leaf_id(path)
+        arr = np.load(d / "arrays" / f"{lid}.npy")
+        if hasattr(like, "dtype"):
+            arr = arr.astype(like.dtype)
+        leaves.append(jax.device_put(arr, shd) if shd is not None
+                      else jax.numpy.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree_like), leaves)
+    return tree, manifest["step"], manifest.get("data_step")
+
+
+def cleanup_old(base: str, keep: int) -> None:
+    base_p = Path(base)
+    if not base_p.exists():
+        return
+    steps = sorted(
+        int(d.name[5:]) for d in base_p.iterdir()
+        if d.name.startswith("step_") and (d / "COMMITTED").exists())
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(base_p / f"step_{s:09d}", ignore_errors=True)
+    # remove stale tmp dirs (crashed writes)
+    for d in base_p.iterdir():
+        if d.name.startswith(".tmp_step_"):
+            shutil.rmtree(d, ignore_errors=True)

@@ -1,0 +1,3 @@
+"""Architecture configs. Use repro.configs.registry.get_config(name)."""
+
+from .base import ArchConfig, BlockCfg, ShapeCfg, LM_SHAPES

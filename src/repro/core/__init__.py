@@ -1,0 +1,26 @@
+"""ESACT core: the SPLS mechanism (Sparsity Prediction with Local Similarity).
+
+Public API:
+  quantizers      -- HLog / PoT / APoT log-domain quantizers + bit-level SD
+  predict         -- HLog-quantized attention prediction (PAM)
+  topk            -- row-wise top-k -> SPA + K/V column pruning
+  similarity      -- fixed-window local similarity (critical/similar rows)
+  mfi             -- Most-Frequent-Index FFN token sparsity
+  spls            -- end-to-end plan builder
+  sparse_exec     -- simulation- and capacity-mode sparse execution
+  flops           -- exact FLOPs accounting (Fig. 15 reproduction)
+"""
+
+from .quantizers import (apot_project, hlog_bitlevel_decode,
+                         hlog_bitlevel_encode, hlog_bitlevel_project,
+                         hlog_levels, hlog_project, pot_project,
+                         quantize_dequantize, symmetric_quantize)
+from .predict import predict_qk, predicted_attention
+from .topk import kv_keep_from_mask, row_topk_mask, sparsify_pam, topk_count
+from .similarity import LocalSimilarity, local_similarity, windowed_l1
+from .mfi import FFNSparsity, mfi_ffn_sparsity
+from .spls import SPLSConfig, SparsityPlan, build_plan, plan_stats
+from .sparse_exec import (gather_rows, pack_by_mask, spls_attention,
+                          spls_attention_packed, spls_ffn, spls_ffn_packed,
+                          unpack_by_leader)
+from .flops import ComponentFlops, dense_flops, reduction_report, spls_flops

@@ -1,0 +1,115 @@
+"""FLOPs accounting for the SPLS mechanism (reproduces Fig. 15's breakdown).
+
+Counts multiply-accumulates x2 (one mul + one add = 2 FLOPs) for the three
+transformer components the paper sparsifies -- QKV generation, attention
+(QK^T and AV), and the FFN -- both dense and under a
+:class:`~repro.core.spls.SparsityPlan`, plus the prediction overhead that
+SPLS itself costs.  All counts are *exact* expectations over the plan masks,
+matching how the paper's cycle simulator scales stage latencies by measured
+sparsity ratios.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .spls import SparsityPlan
+
+__all__ = ["ComponentFlops", "dense_flops", "spls_flops", "reduction_report"]
+
+
+class ComponentFlops(NamedTuple):
+    qkv: jax.Array        # Q,K,V projections (+ output projection)
+    attention: jax.Array  # QK^T + AV
+    ffn: jax.Array        # both FFN linears
+    overhead: jax.Array   # SPLS prediction cost (0 for dense)
+
+    @property
+    def total(self):
+        return self.qkv + self.attention + self.ffn + self.overhead
+
+
+def dense_flops(B: int, L: int, D: int, H: int, d_ff: int,
+                causal: bool = False) -> ComponentFlops:
+    """Per-block dense FLOPs.  Attention counts the causal half if asked."""
+    f = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+    qkv = 4 * 2.0 * B * L * D * D        # Wq, Wk, Wv, Wo
+    attn_pairs = (L * (L + 1) / 2) if causal else float(L * L)
+    attn = 2 * 2.0 * B * H * attn_pairs * (D // H)
+    ffn = 2 * 2.0 * B * L * D * d_ff
+    z = jnp.asarray(0.0, f)
+    return ComponentFlops(jnp.asarray(qkv, f), jnp.asarray(attn, f),
+                          jnp.asarray(ffn, f), z)
+
+
+def spls_flops(plan: SparsityPlan, D: int, d_ff: int,
+               include_overhead: bool = True) -> ComponentFlops:
+    """FLOPs actually executed under ``plan``.
+
+    QKV: Q rows generated only for per-head critical rows; K/V rows only for
+    surviving columns; the output projection runs on recovered (full) rows
+    because concatenation restores the shape -- the paper's dynamic
+    allocation computes only critical Psums, so Wo is scaled by the mean
+    critical fraction as well.
+    Attention: each computed row costs its surviving mask entries (QK^T) and
+    the same count again for AV.
+    FFN: two linears on critical tokens only.
+    Overhead: HLog prediction = two DxD-ish matmuls on X plus the predicted
+    score matmul, at "addition cost".  We charge it at 1 FLOP per MAC (adds
+    only -- the bit-level unit removes the multiplies) plus the L1
+    similarity adds ``L^2 (w-1)`` -- conservative upper bound.
+    """
+    *lead, L, _ = plan.attn_mask.shape
+    B = lead[0]
+    Hh = 1
+    for d in lead[1:]:
+        Hh *= d
+    Dh = D // Hh
+    fq = plan.q_critical.astype(jnp.float32)
+    fkv = plan.kv_keep.astype(jnp.float32)
+    fffn = plan.ffn_critical.astype(jnp.float32)
+
+    q_rows = fq.sum()                       # total critical rows over B,H
+    kv_rows = fkv.sum()
+    # Q projection is per-head slice (D x Dh per head); K/V likewise.
+    qkv = 2.0 * (q_rows * D * Dh + 2.0 * kv_rows * D * Dh)
+    # Wo runs on critical rows per head (dynamic allocation, Sec. IV-D)
+    qkv = qkv + 2.0 * q_rows * Dh * D
+
+    # attention: computed rows are the critical ones; each costs its mask row
+    mask_rows = plan.attn_mask & plan.q_critical[..., None]
+    pairs = mask_rows.astype(jnp.float32).sum()
+    attn = 2 * 2.0 * pairs * Dh
+
+    ffn = 2 * 2.0 * fffn.sum() * D * d_ff
+
+    if include_overhead:
+        # prediction matmuls (adds only): X@Wq', X@Wk' and Q'K'^T per head
+        pred = (2.0 * B * L * D * D) + B * Hh * (L * (L + 1) / 2) * Dh
+        sim = B * Hh * L * L  # L1 adds, <= L^2 (w-1) but on SPA rows
+        overhead = jnp.asarray(pred + sim, jnp.float32)
+    else:
+        overhead = jnp.asarray(0.0, jnp.float32)
+    return ComponentFlops(qkv, attn, ffn, overhead)
+
+
+def reduction_report(plan: SparsityPlan, D: int, d_ff: int,
+                     causal: bool = True) -> dict:
+    """Fractional computation reduction per component + overall (Fig. 15)."""
+    *lead, L, _ = plan.attn_mask.shape
+    B, H = lead[0], 1
+    for d in lead[1:]:
+        H *= d
+    dense = dense_flops(B, L, D, H, d_ff, causal=causal)
+    sparse = spls_flops(plan, D, d_ff)
+    red = lambda d, s: 1.0 - s / d
+    return {
+        "qkv_reduction": red(dense.qkv, sparse.qkv),
+        "attention_reduction": red(dense.attention, sparse.attention),
+        "ffn_reduction": red(dense.ffn, sparse.ffn),
+        "overall_reduction": red(dense.total, sparse.total),
+        "overhead_fraction": sparse.overhead / dense.total,
+    }

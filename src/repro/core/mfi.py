@@ -1,0 +1,66 @@
+"""Most-Frequent-Index (MFI) token similarity for FFN sparsification.
+
+Sec. III-D: a token's similarity pattern differs across heads, so ESACT
+represents each token by the critical-row index it maps to in every head,
+takes the *mode* across heads (the MFI) and, if that index wins at least
+``f`` head votes, declares the token similar to the MFI token: its FFN
+output is not computed but copied from the MFI token's output.
+
+Because leaders always live in the same fixed window as the token (local
+similarity), the vote is over window-local offsets in ``[0, w)`` -- a cheap
+one-hot histogram, exactly the counter array the hardware uses.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FFNSparsity", "mfi_ffn_sparsity"]
+
+
+class FFNSparsity(NamedTuple):
+    is_critical: jax.Array  # (..., L) bool: FFN actually computed
+    leader: jax.Array       # (..., L) int32: token whose FFN output is reused
+    votes: jax.Array        # (..., L) int32: MFI vote count (diagnostic)
+
+
+def mfi_ffn_sparsity(leader: jax.Array, w: int, f_threshold: int,
+                     n_pointer_jumps: int = 3) -> FFNSparsity:
+    """Token-level FFN sparsity from per-head attention leaders.
+
+    Args:
+      leader: (..., H, L) int32 global leader row per head (from
+        :func:`repro.core.similarity.local_similarity`).
+      w: window width (leaders are window-local).
+      f_threshold: minimum vote count ``f``.  *Smaller* f -> more tokens pass
+        the vote -> more FFN sparsity (Fig. 19).
+      n_pointer_jumps: leader-chain flattening steps.  The MFI target of a
+        similar token may itself be similar; we pointer-jump so every similar
+        token ends on an FFN-critical token (ceil(log2(w)) hops suffice since
+        leaders strictly precede followers inside a window).
+
+    Returns per-token FFN sparsity over (..., L).
+    """
+    *lead, H, L = leader.shape
+    off = leader % w                                  # window-local offsets
+    votes_onehot = jax.nn.one_hot(off, w, dtype=jnp.int32)   # (..., H, L, w)
+    counts = votes_onehot.sum(axis=-3)                       # (..., L, w)
+    mfi_off = jnp.argmax(counts, axis=-1).astype(jnp.int32)  # (..., L)
+    mfi_votes = jnp.max(counts, axis=-1)
+
+    tok = jnp.arange(L, dtype=jnp.int32)
+    tok = jnp.broadcast_to(tok, (*lead, L))
+    window_base = (tok // w) * w
+    mfi_global = jnp.minimum(window_base + mfi_off, jnp.int32(L - 1))
+
+    similar = (mfi_votes >= f_threshold) & (mfi_global != tok)
+    ffn_leader = jnp.where(similar, mfi_global, tok)
+
+    # Flatten leader chains: a token must point at an FFN-critical token.
+    for _ in range(n_pointer_jumps):
+        ffn_leader = jnp.take_along_axis(ffn_leader, ffn_leader, axis=-1)
+    is_crit = ffn_leader == tok
+    return FFNSparsity(is_critical=is_crit, leader=ffn_leader, votes=mfi_votes)

@@ -1,0 +1,79 @@
+"""Attention prediction: build the Predicted Attention Matrix (PAM).
+
+ESACT predicts attention *before* the formal QKV generation (Fig. 5a): the
+int8 embeddings X and the int8 weights W_Q, W_K are HLog-quantized, the
+predicted Q'/K' are formed with shift-add arithmetic, re-quantized to 8 bits,
+HLog-quantized again, and multiplied to produce the PAM.  Everything here is
+the pure-JAX realisation of that pipeline; the Pallas kernel in
+``repro.kernels.hlog_qmatmul`` fuses the two quantized matmuls for the
+TPU-native path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quantizers import quantize_dequantize
+
+__all__ = ["predict_qk", "predicted_attention", "split_heads"]
+
+
+def split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    """(..., L, D) -> (..., H, L, Dh)."""
+    *lead, L, D = x.shape
+    if D % n_heads:
+        raise ValueError(f"D={D} not divisible by n_heads={n_heads}")
+    return x.reshape(*lead, L, n_heads, D // n_heads).swapaxes(-2, -3)
+
+
+def predict_qk(x: jax.Array, wq: jax.Array, wk: jax.Array,
+               method: str = "hlog", bits: int = 8):
+    """Predict Q and K with log-domain quantized inputs and weights.
+
+    Args:
+      x:  (..., L, D) activations (float; int8-QAT values in the paper).
+      wq, wk: (D, D_qk) projection weights.
+
+    Returns ``(q_pred, k_pred)`` of shape (..., L, D_qk), re-quantized to
+    8-bit + projected again, ready for the score matmul -- this mirrors the
+    "additional 8-bit quantization ... and the entire process is repeated"
+    step of Sec. IV-B.
+    """
+    xq = quantize_dequantize(x, method, bits)
+    q_pred = xq @ quantize_dequantize(wq, method, bits)
+    k_pred = xq @ quantize_dequantize(wk, method, bits)
+    # second-stage quantization of the predicted Q/K
+    q_pred = quantize_dequantize(q_pred, method, bits)
+    k_pred = quantize_dequantize(k_pred, method, bits)
+    return q_pred, k_pred
+
+
+def predicted_attention(x: jax.Array, wq: jax.Array, wk: jax.Array,
+                        n_heads: int, method: str = "hlog", bits: int = 8,
+                        causal: bool = False, scale: Optional[float] = None,
+                        n_kv_heads: Optional[int] = None) -> jax.Array:
+    """Full PAM: (..., H, L, L) predicted scores (pre-softmax).
+
+    ``causal=True`` masks the strict upper triangle to ``-inf`` substitute
+    (a large negative) so top-k never selects future positions for decoder
+    models.  For GQA (``n_kv_heads < n_heads``) the predicted K heads are
+    broadcast across their query group, giving a per-*query*-head PAM.
+    """
+    qp, kp = predict_qk(x, wq, wk, method, bits)
+    qh = split_heads(qp, n_heads)
+    n_kv = n_kv_heads or n_heads
+    kh = split_heads(kp, n_kv)
+    if n_kv != n_heads:
+        kh = jnp.repeat(kh, n_heads // n_kv, axis=-3)
+    dh = qh.shape[-1]
+    s = scale if scale is not None else 1.0 / jnp.sqrt(jnp.asarray(dh, qh.dtype))
+    pam = jnp.einsum("...hqd,...hkd->...hqk", qh, kh) * s
+    if causal:
+        L = pam.shape[-1]
+        neg = jnp.asarray(jnp.finfo(pam.dtype).min / 2, pam.dtype)
+        tri = jnp.tril(jnp.ones((L, L), dtype=bool))
+        pam = jnp.where(tri, pam, neg)
+    return pam

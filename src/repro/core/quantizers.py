@@ -1,0 +1,229 @@
+"""Quantizers used by the SPLS sparsity-prediction pipeline.
+
+The paper (ESACT, Sec. III-A) predicts the attention matrix *before* the
+formal QKV generation, using aggressively quantized inputs/weights.  Three
+log-domain quantizers are compared:
+
+* **PoT**  -- power-of-two levels ``{2^m}``; cheap (leading-one detect) but
+  large projection error for big magnitudes.
+* **APoT** -- additive powers-of-two (a=2), levels ``{2^i + 2^j, i > j}``;
+  accurate but level-dense, and on real hardware its irregular level set
+  forces adder-tree accumulation.
+* **HLog** -- the paper's hybrid: powers of two plus their *intermediate
+  averages*, eq. (1): ``{2^0, 2^1, 2^0+2^1, 2^2, ..., 2^{n-2},
+  2^{n-3}+2^{n-2}, 2^{n-1}}`` i.e. ``{2^m} U {1.5 * 2^m}``.  Ties project to
+  the *higher* level.
+
+All quantizers here operate on **integer magnitudes** obtained from an 8-bit
+symmetric pre-quantization (the paper quantizes all linear weights to int8
+first) and return *dequantized* values on the original scale, so the rest of
+the prediction pipeline is plain arithmetic on floats.
+
+Hardware note (DESIGN.md "hardware adaptation"): the paper's bit-level shift
+detector / shift-judgment array replaces multiplications with additions on an
+ASIC.  A TPU has no scalar shift-add datapath that beats the MXU, so the
+TPU-native realisation keeps the *numerics* of HLog (the projection below is
+bit-exact w.r.t. the SD unit, see ``hlog_bitlevel_*``) and maps the product
+onto an int8/bf16 MXU matmul of the dequantized codes -- the win on TPU is
+doing the *prediction* at low precision on tiny matrices, not avoiding
+multipliers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "symmetric_quantize",
+    "hlog_levels",
+    "pot_levels",
+    "apot_levels",
+    "project_to_levels",
+    "hlog_project",
+    "pot_project",
+    "apot_project",
+    "hlog_bitlevel_encode",
+    "hlog_bitlevel_decode",
+    "hlog_bitlevel_project",
+    "quantize_dequantize",
+]
+
+
+# ---------------------------------------------------------------------------
+# 8-bit symmetric pre-quantization
+# ---------------------------------------------------------------------------
+
+def symmetric_quantize(x: jax.Array, bits: int = 8, axis=None,
+                       eps: float = 1e-8) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor (or per-``axis``) quantization.
+
+    Returns ``(q, scale)`` with ``q`` integer-valued (stored as float32 for
+    downstream arithmetic) in ``[-(2^{bits-1}-1), 2^{bits-1}-1]`` and
+    ``x ~= q * scale``.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, eps) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Level sets
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def hlog_levels(bits: int = 8) -> np.ndarray:
+    """HLog magnitude levels, eq. (1) of the paper.
+
+    ``{2^m : m=0..bits-1} U {1.5 * 2^m : m=1..bits-2}``; sorted ascending.
+    For bits=8: [1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128].
+    """
+    singles = [2.0 ** m for m in range(bits)]
+    sums = [2.0 ** (m - 1) + 2.0 ** m for m in range(1, bits - 1)]
+    return np.array(sorted(singles + sums), dtype=np.float64)
+
+
+@functools.lru_cache(maxsize=None)
+def pot_levels(bits: int = 8) -> np.ndarray:
+    """Power-of-two magnitude levels ``{2^m : m = 0..bits-1}``."""
+    return np.array([2.0 ** m for m in range(bits)], dtype=np.float64)
+
+
+@functools.lru_cache(maxsize=None)
+def apot_levels(bits: int = 8) -> np.ndarray:
+    """Additive-PoT (a=2) magnitude levels ``{2^i} U {2^i + 2^j, i > j}``."""
+    lv = set()
+    for i in range(bits):
+        lv.add(2.0 ** i)
+        for j in range(i):
+            lv.add(2.0 ** i + 2.0 ** j)
+    return np.array(sorted(lv), dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Generic projection (nearest level, ties -> higher level)
+# ---------------------------------------------------------------------------
+
+def project_to_levels(mag: jax.Array, levels: np.ndarray) -> jax.Array:
+    """Project non-negative magnitudes onto ``levels`` (nearest; tie -> up).
+
+    Magnitudes below the smallest level / 2 (exclusive) round to zero only
+    when exactly 0; the paper pre-quantizes to ints >= 1 so sub-level inputs
+    do not occur, but we handle them by clamping to the nearest level.
+    Zero stays zero.
+    """
+    lv = jnp.asarray(levels, dtype=mag.dtype)
+    # midpoints between consecutive levels; value >= midpoint -> upper level
+    mids = (lv[:-1] + lv[1:]) / 2.0
+    idx = jnp.searchsorted(mids, mag, side="right")  # tie (== mid) -> upper
+    proj = lv[idx]
+    return jnp.where(mag == 0, jnp.zeros_like(proj), proj)
+
+
+def _signed_project(x: jax.Array, levels: np.ndarray) -> jax.Array:
+    return jnp.sign(x) * project_to_levels(jnp.abs(x), levels)
+
+
+def hlog_project(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Signed HLog projection of integer-valued ``x``."""
+    return _signed_project(x, hlog_levels(bits))
+
+
+def pot_project(x: jax.Array, bits: int = 8) -> jax.Array:
+    return _signed_project(x, pot_levels(bits))
+
+
+def apot_project(x: jax.Array, bits: int = 8) -> jax.Array:
+    return _signed_project(x, apot_levels(bits))
+
+
+# ---------------------------------------------------------------------------
+# Bit-level HLog (the Shift Detector of Sec. IV-B), bit-exact vs. projection
+# ---------------------------------------------------------------------------
+
+def hlog_bitlevel_encode(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Bit-level Shift-Detector encoding of integer-valued ``x``.
+
+    Mirrors Fig. 12: find the leading one of the magnitude, inspect the next
+    two bits ``b1 b0`` and emit a 5-bit code ``[sign | exp(3) | form(1)]``:
+
+      * ``b1 b0 = 00``            -> ``2^m``          (form=0, exp=m)
+      * ``b1 b0 = 01`` or ``10``  -> ``1.5 * 2^m``    (form=1, exp=m)
+      * ``b1 b0 = 11``            -> ``2^{m+1}``      (form=0, exp=m+1)
+
+    ``form = b1 XOR b0``; ``exp = m + (b1 AND b0)`` -- exactly the XOR/OR
+    gate pair of the SD unit.  Encoded as an int32 ``sign*2^4 + exp*2 + form``
+    with the convention exp occupies 3 bits for bits=8 (m+1 <= 7... m+1 can
+    be 8 for inputs >= 224; we keep exp as a plain integer field here; the
+    5-bit packing in RTL caps inputs at int8 so exp <= 7 never overflows for
+    |x| <= 127 except 112..127 -> exp 7, fine).
+
+    Special case m=0 (|x| == 1): next bits are zero -> code ``2^0``.
+    Zero encodes to the all-zero code with form=0 exp=0 sign=0 and must be
+    masked by the caller (we return -1 in the exp field sentinel-free; decode
+    handles it via the stored zero flag bit packed at bit 5).
+    """
+    mag = jnp.abs(x).astype(jnp.int32)
+    sign = (x < 0).astype(jnp.int32)
+    is_zero = (mag == 0)
+    safe = jnp.maximum(mag, 1)
+    # leading-one position m = floor(log2(mag))
+    m = (31 - jax.lax.clz(safe)).astype(jnp.int32)
+    b1 = (safe >> jnp.maximum(m - 1, 0)) & 1
+    b1 = jnp.where(m >= 1, b1, 0)
+    b0 = (safe >> jnp.maximum(m - 2, 0)) & 1
+    b0 = jnp.where(m >= 2, b0, 0)
+    form = b1 ^ b0
+    exp = m + (b1 & b0)
+    # m=0 can only be |x|==1 -> form 0 exp 0 (b1=b0=0 already ensures this)
+    code = (sign << 4) | (exp << 1) | form
+    code = jnp.where(is_zero, jnp.full_like(code, 1 << 5), code)  # zero flag
+    return code
+
+
+def hlog_bitlevel_decode(code: jax.Array) -> jax.Array:
+    """Decode SD codes back to signed dequantized values (float32)."""
+    is_zero = (code >> 5) & 1
+    sign = (code >> 4) & 1
+    exp = (code >> 1) & 7
+    form = code & 1
+    val = jnp.exp2(exp.astype(jnp.float32)) * (1.0 + 0.5 * form.astype(jnp.float32))
+    val = jnp.where(sign == 1, -val, val)
+    return jnp.where(is_zero == 1, jnp.zeros_like(val), val)
+
+
+def hlog_bitlevel_project(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Encode+decode; bit-exact equal to :func:`hlog_project` on integers."""
+    return hlog_bitlevel_decode(hlog_bitlevel_encode(x, bits))
+
+
+# ---------------------------------------------------------------------------
+# Convenience: float -> int8 -> log-domain -> dequantized float
+# ---------------------------------------------------------------------------
+
+_PROJECTORS = {
+    "hlog": hlog_project,
+    "hlog_bitlevel": hlog_bitlevel_project,
+    "pot": pot_project,
+    "apot": apot_project,
+    "none": lambda q, bits=8: q,
+}
+
+
+def quantize_dequantize(x: jax.Array, method: str = "hlog", bits: int = 8,
+                        axis=None) -> jax.Array:
+    """Full prediction-path quantization: int8 symmetric then log projection.
+
+    Returns float values on the original scale of ``x``.
+    """
+    if method not in _PROJECTORS:
+        raise ValueError(f"unknown quantization method {method!r}; "
+                         f"expected one of {sorted(_PROJECTORS)}")
+    q, scale = symmetric_quantize(x, bits=bits, axis=axis)
+    return _PROJECTORS[method](q, bits) * scale

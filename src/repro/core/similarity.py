@@ -1,0 +1,114 @@
+"""Local (fixed-window) similarity on the SPA -> critical / similar rows.
+
+Sec. III-B: the L x L SPA is partitioned into non-overlapping row windows of
+width ``w`` (the paper uses w=8).  Within each window, rows are compared with
+the L1 distance; rows whose normalized distance to an earlier *critical* row
+falls below the similarity threshold ``s`` become *similar* rows, pointing at
+that critical row (their "leader").  This costs ``L^2 (w-1)`` add/sub total
+instead of the quadratic-in-L cost of global similarity -- the core insight
+of the paper.
+
+Windows are independent, so the whole computation is embarrassingly parallel
+across (batch, head, window); the greedy leader scan is over the *static*
+window width only and is unrolled at trace time.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LocalSimilarity", "windowed_l1", "local_similarity", "num_windows"]
+
+
+class LocalSimilarity(NamedTuple):
+    """Similarity structure for one SPA.
+
+    Attributes (leading dims ``(..., H)`` broadcast over batch/heads):
+      is_critical: (..., H, L) bool -- row must actually be computed.
+      leader:      (..., H, L) int32 -- global row index whose attention row
+                   this row reuses; ``leader[i] == i`` iff critical.
+      dist:        (..., H, nw, w, w) float32 normalized pairwise distances
+                   (diagnostic; zero on the diagonal).
+    """
+
+    is_critical: jax.Array
+    leader: jax.Array
+    dist: jax.Array
+
+
+def num_windows(L: int, w: int) -> int:
+    return math.ceil(L / w)
+
+
+def _pad_rows(x: jax.Array, L_pad: int) -> jax.Array:
+    pad = L_pad - x.shape[-2]
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * (x.ndim - 2) + [(0, pad), (0, 0)]
+    return jnp.pad(x, cfg)
+
+
+def windowed_l1(spa: jax.Array, w: int, eps: float = 1e-6) -> jax.Array:
+    """Normalized pairwise L1 distances within each row window.
+
+    Input (..., L, Lk); output (..., nw, w, w) with
+    ``d[i,j] = ||a_i - a_j||_1 / (||a_i||_1 + ||a_j||_1 + eps)`` in [0, 1].
+    Rows are compared on their SPA values (zeros where top-k dropped), which
+    is exactly what the hardware similarity unit sees.
+    """
+    *lead, L, Lk = spa.shape
+    nw = num_windows(L, w)
+    xp = _pad_rows(spa, nw * w).reshape(*lead, nw, w, Lk)
+    diff = jnp.abs(xp[..., :, None, :] - xp[..., None, :, :]).sum(-1)
+    norm = jnp.abs(xp).sum(-1)
+    denom = norm[..., :, None] + norm[..., None, :] + eps
+    return (diff / denom).astype(jnp.float32)
+
+
+def local_similarity(spa: jax.Array, w: int, s: float,
+                     valid_len: Optional[int] = None) -> LocalSimilarity:
+    """Greedy leader clustering within fixed windows.
+
+    Row 0 of each window is critical.  Each subsequent row joins the *first*
+    earlier critical row within its window whose normalized L1 distance is
+    <= ``s``; otherwise it becomes critical itself.  ``s`` larger -> more
+    rows classified similar -> more sparsity (matches Fig. 16).
+
+    ``valid_len`` masks padded tail rows (they are reported non-critical with
+    ``leader = row_index`` and never serve as leaders).
+    """
+    *lead, L, _ = spa.shape
+    if valid_len is None:
+        valid_len = L
+    nw = num_windows(L, w)
+    d = windowed_l1(spa, w)  # (..., nw, w, w)
+    row_ids = jnp.arange(nw * w, dtype=jnp.int32).reshape(nw, w)
+    valid = (row_ids < valid_len)  # (nw, w)
+    valid = jnp.broadcast_to(valid, (*lead, nw, w))
+
+    is_crit = [None] * w
+    leader_off = [None] * w  # local offset within window
+    is_crit[0] = valid[..., 0]
+    leader_off[0] = jnp.zeros(valid.shape[:-1], dtype=jnp.int32)
+    for j in range(1, w):
+        # eligibility of each earlier row i < j as a leader for row j
+        elig = jnp.stack(
+            [is_crit[i] & (d[..., i, j] <= s) for i in range(j)], axis=-1)
+        found = jnp.any(elig, axis=-1)
+        first = jnp.argmax(elig, axis=-1).astype(jnp.int32)  # first True
+        vj = valid[..., j]
+        is_crit[j] = vj & ~found
+        leader_off[j] = jnp.where(vj & found, first, jnp.int32(j))
+
+    crit = jnp.stack(is_crit, axis=-1)                       # (..., nw, w)
+    loff = jnp.stack(leader_off, axis=-1).astype(jnp.int32)  # (..., nw, w)
+    base = (jnp.arange(nw, dtype=jnp.int32) * w)[:, None]
+    leader_global = (loff + base).reshape(*lead, nw * w)[..., :L]
+    crit = crit.reshape(*lead, nw * w)[..., :L]
+    # clamp leaders of (possibly padded) rows into range
+    leader_global = jnp.minimum(leader_global, jnp.int32(L - 1))
+    return LocalSimilarity(is_critical=crit, leader=leader_global, dist=d)

@@ -1,0 +1,234 @@
+"""Execution of the formal computation phase under a SparsityPlan.
+
+Two execution modes, both bit-identical in what they *mean* but differing in
+how the saved work is realised:
+
+* **simulation** -- dense tensor math with gather/mask semantics.  The
+  numerics are exactly the accelerator's (similar rows reuse their leader's
+  attention/FFN output; pruned K/V columns are masked out), and the FLOPs
+  accountant (:mod:`repro.core.flops`) reports the work the accelerator
+  would skip.  This is the mode used for accuracy studies and training.
+
+* **capacity** -- the TPU-native adaptation.  Dynamic row counts are
+  incompatible with XLA's static shapes, so critical rows/tokens are packed
+  into fixed-capacity buffers (like MoE capacity routing), computed densely
+  at the reduced size, and scattered back through the leader map.  With
+  ``capacity == L`` this is exactly equivalent to simulation mode (tests
+  assert this); with capacity < L the compute actually shrinks and overflow
+  rows fall back to their window leader.
+
+Hardware-adaptation note: the ASIC exploits *perfectly* dynamic sparsity via
+its dynamic-allocation FIFO scheduler (Sec. IV-D).  The TPU analogue of that
+scheduler is exactly the pack-to-capacity + static-matmul strategy here:
+load balance comes from the pack, and "FIFO recovery" becomes a gather.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .spls import SparsityPlan
+
+__all__ = [
+    "gather_rows",
+    "pack_by_mask",
+    "unpack_by_leader",
+    "spls_attention",
+    "spls_attention_packed",
+    "spls_attention_chunked",
+    "spls_ffn",
+    "spls_ffn_packed",
+]
+
+_NEG = -1e30
+
+
+def gather_rows(x: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather along the row axis (-2) with a (..., L) index map."""
+    return jnp.take_along_axis(x, idx[..., None], axis=-2)
+
+
+def pack_by_mask(mask: jax.Array, capacity: int) -> Tuple[jax.Array, jax.Array]:
+    """Pack True positions of ``mask`` (..., L) first, truncated to capacity.
+
+    Returns ``(perm, slot_of)``:
+      perm:    (..., C) int32 -- source row index for each packed slot (stable
+               order; slots past the true count hold trailing non-critical
+               rows, which are computed wastefully but harmlessly).
+      slot_of: (..., L) int32 -- packed slot that holds each source row's
+               result, clamped into [0, C).  Rows that did not fit map to
+               slot of their nearest packed predecessor (capacity overflow
+               fallback).
+    """
+    L = mask.shape[-1]
+    C = min(capacity, L)
+    order = jnp.argsort(~mask, axis=-1, stable=True).astype(jnp.int32)
+    perm = order[..., :C]
+    # slot_of[row] = position of `row` inside `order`, clamped to C-1
+    slots = jnp.argsort(order, axis=-1, stable=True).astype(jnp.int32)
+    slot_of = jnp.minimum(slots, jnp.int32(C - 1))
+    return perm, slot_of
+
+
+def unpack_by_leader(packed: jax.Array, slot_of: jax.Array,
+                     leader: jax.Array) -> jax.Array:
+    """Scatter packed rows back to full length through the leader map.
+
+    ``out[row] = packed[slot_of[leader[row]]]`` -- similar rows read their
+    leader's slot; critical rows read their own.
+    """
+    src_slot = jnp.take_along_axis(slot_of, leader, axis=-1)
+    return gather_rows(packed, src_slot)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _masked_softmax(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    scores = jnp.where(mask, scores, _NEG)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m) * mask.astype(scores.dtype)
+    return e / (jnp.sum(e, axis=-1, keepdims=True) + 1e-9)
+
+
+def spls_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   plan: SparsityPlan, scale: Optional[float] = None,
+                   softcap: Optional[float] = None) -> jax.Array:
+    """Simulation-mode sparse attention.  q,k,v: (B, H, L, Dh).
+
+    Semantics: a similar row's output is its leader's output (so both the Q
+    vector and the SPA mask row are the leader's); pruned K/V columns never
+    receive probability mass.
+    """
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    q_eff = gather_rows(q, plan.q_leader)
+    mask_eff = jnp.take_along_axis(plan.attn_mask, plan.q_leader[..., None],
+                                   axis=-2)
+    s = jnp.einsum("...qd,...kd->...qk", q_eff, k) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    a = _masked_softmax(s, mask_eff)
+    return jnp.einsum("...qk,...kd->...qd", a, v)
+
+
+def spls_attention_packed(q: jax.Array, k: jax.Array, v: jax.Array,
+                          plan: SparsityPlan, q_capacity: int,
+                          kv_capacity: int, scale: Optional[float] = None,
+                          softcap: Optional[float] = None) -> jax.Array:
+    """Capacity-mode sparse attention with real compute reduction.
+
+    Packs critical Q rows to ``q_capacity`` and surviving K/V positions to
+    ``kv_capacity`` per (batch, head); computes a (C_q x C_kv) attention and
+    scatters rows back through the leader map.
+    """
+    L, Dh = q.shape[-2], q.shape[-1]
+    scale = scale if scale is not None else Dh ** -0.5
+    q_perm, q_slot = pack_by_mask(plan.q_critical, q_capacity)
+    kv_perm, _ = pack_by_mask(plan.kv_keep, kv_capacity)
+
+    qp = gather_rows(q, q_perm)                       # (B,H,Cq,Dh)
+    kp = gather_rows(k, kv_perm)                      # (B,H,Ck,Dh)
+    vp = gather_rows(v, kv_perm)
+    # packed mask: rows by q_perm, cols by kv_perm
+    mrows = jnp.take_along_axis(plan.attn_mask, q_perm[..., None], axis=-2)
+    mp = jnp.take_along_axis(mrows, kv_perm[..., None, :], axis=-1)
+    # slots past the kv keep-count must stay dead even if mask bits are set
+    kv_alive = jnp.take_along_axis(plan.kv_keep, kv_perm, axis=-1)
+    mp = mp & kv_alive[..., None, :]
+
+    s = jnp.einsum("...qd,...kd->...qk", qp, kp) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    a = _masked_softmax(s, mp)
+    op = jnp.einsum("...qk,...kd->...qd", a, vp)         # (B,H,Cq,Dh)
+    return unpack_by_leader(op, q_slot, plan.q_leader)
+
+
+def spls_attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                           plan, q_capacity: int, kv_capacity: int,
+                           scale: Optional[float] = None,
+                           softcap: Optional[float] = None,
+                           kv_chunk: int = 2048,
+                           causal: bool = True) -> jax.Array:
+    """Long-sequence capacity-mode sparse attention (ChunkedPlan).
+
+    q: (B, KV', G', L, Dh); k/v: (B, KV', L, Dh) (un-repeated).  Packs
+    critical Q rows and surviving KV columns to static capacities, then
+    runs an online-softmax scan over packed-KV chunks with an *index-based*
+    causal mask (packed positions carry their original row/col ids).  Peak
+    memory O(Cq * kv_chunk) per head; compute O(Cq * Ckv) -- the real
+    FLOP reduction of the paper's inter-row + column sparsity at 32k+.
+    """
+    B, KVp, Gp, L, Dh = q.shape
+    scale = scale if scale is not None else Dh ** -0.5
+    Cq, Ck = min(q_capacity, L), min(kv_capacity, L)
+    assert Ck % kv_chunk == 0 or Ck < kv_chunk, (Ck, kv_chunk)
+    kv_chunk = min(kv_chunk, Ck)
+
+    q_perm, q_slot = pack_by_mask(plan.q_critical, Cq)
+    kv_perm, _ = pack_by_mask(plan.kv_keep, Ck)
+
+    qp = gather_rows(q, q_perm)                                 # (B,K,G,Cq,D)
+    kr = jnp.broadcast_to(k[:, :, None], (B, KVp, Gp, L, Dh))
+    vr = jnp.broadcast_to(v[:, :, None], (B, KVp, Gp, L, Dh))
+    kp = gather_rows(kr, kv_perm)                               # (B,K,G,Ck,D)
+    vp = gather_rows(vr, kv_perm)
+    kv_alive = jnp.take_along_axis(plan.kv_keep, kv_perm, axis=-1)
+
+    nC = Ck // kv_chunk
+    kc = kp.reshape(B, KVp, Gp, nC, kv_chunk, Dh).transpose(3, 0, 1, 2, 4, 5)
+    vc = vp.reshape(B, KVp, Gp, nC, kv_chunk, Dh).transpose(3, 0, 1, 2, 4, 5)
+    idc = kv_perm.reshape(B, KVp, Gp, nC, kv_chunk).transpose(3, 0, 1, 2, 4)
+    alc = kv_alive.reshape(B, KVp, Gp, nC, kv_chunk).transpose(3, 0, 1, 2, 4)
+
+    def body(carry, ck):
+        m_run, l_run, acc = carry
+        k_c, v_c, id_c, al_c = ck
+        s = jnp.einsum("bkgqd,bkgld->bkgql", qp, k_c).astype(jnp.float32)
+        s = s * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = al_c[..., None, :]
+        if causal:
+            mask = mask & (id_c[..., None, :] <= q_perm[..., :, None])
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m_run, s.max(-1))
+        corr = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None]) * mask.astype(jnp.float32)
+        l_new = l_run * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgql,bkgld->bkgqd", p.astype(v_c.dtype), v_c
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((B, KVp, Gp, Cq), -1e30, jnp.float32),
+            jnp.zeros((B, KVp, Gp, Cq), jnp.float32),
+            jnp.zeros((B, KVp, Gp, Cq, Dh), jnp.float32))
+    (m_f, l_f, acc), _ = jax.lax.scan(body, init, (kc, vc, idc, alc))
+    op = (acc / jnp.maximum(l_f, 1e-9)[..., None]).astype(q.dtype)
+    return unpack_by_leader(op, q_slot, plan.q_leader)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def spls_ffn(x: jax.Array, ffn_fn: Callable[[jax.Array], jax.Array],
+             plan: SparsityPlan) -> jax.Array:
+    """Simulation-mode sparse FFN: compute dense, recover similar tokens from
+    their MFI leader (x: (B, L, D))."""
+    y = ffn_fn(x)
+    return gather_rows(y, plan.ffn_leader)
+
+
+def spls_ffn_packed(x: jax.Array, ffn_fn: Callable[[jax.Array], jax.Array],
+                    plan: SparsityPlan, capacity: int) -> jax.Array:
+    """Capacity-mode sparse FFN: pack critical tokens, compute, scatter."""
+    perm, slot_of = pack_by_mask(plan.ffn_critical, capacity)
+    xp = gather_rows(x, perm)
+    yp = ffn_fn(xp)
+    return unpack_by_leader(yp, slot_of, plan.ffn_leader)

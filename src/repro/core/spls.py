@@ -1,0 +1,145 @@
+"""SPLS: Sparsity Prediction with Local Similarity -- the paper's mechanism.
+
+Pipeline (Fig. 5a):
+  1. HLog-quantized attention prediction  -> PAM        (predict.py)
+  2. row-wise top-k pruning               -> SPA + mask (topk.py)
+  3. fixed-window local similarity        -> critical/similar Q rows
+  4. zero-column detection                -> K/V keep mask
+  5. MFI vote across heads                -> FFN token sparsity
+
+The output is a :class:`SparsityPlan` consumed by the execution layer
+(``sparse_exec.py``) and by the FLOPs accountant (``flops.py``).  Everything
+is functional and jit-safe: all shapes depend only on static config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .mfi import FFNSparsity, mfi_ffn_sparsity
+from .predict import predicted_attention
+from .similarity import LocalSimilarity, local_similarity
+from .topk import kv_keep_from_mask, sparsify_pam
+
+__all__ = ["SPLSConfig", "SparsityPlan", "build_plan", "plan_stats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SPLSConfig:
+    """Hyper-parameters of the SPLS mechanism (Sec. V-B methodology).
+
+    ``k_ratio`` smaller -> more attention sparsity; ``s_threshold`` larger ->
+    more QKV sparsity; ``f_threshold`` smaller -> more FFN sparsity.
+    """
+
+    enabled: bool = True
+    k_ratio: float = 0.12          # row-wise top-k ratio (paper MRPC setting)
+    s_threshold: float = 0.6       # local-similarity threshold s
+    f_threshold: int = 6           # MFI vote threshold f (heads >= f agree)
+    window: int = 8                # fixed local window width w
+    quant_method: str = "hlog"     # hlog | hlog_bitlevel | pot | apot | none
+    quant_bits: int = 8
+    causal: bool = True
+    ffn_sparsity: bool = True      # allow disabling FFN stage (Fig. 16 runs)
+    qkv_sparsity: bool = True
+    # Capacity-mode execution (TPU-native static shapes); ratios of L.
+    q_capacity_ratio: float = 1.0
+    kv_capacity_ratio: float = 1.0
+
+
+class SparsityPlan(NamedTuple):
+    """Everything the formal computation phase needs.  B=batch, H=heads.
+
+    attn_mask:  (B, H, L, L) bool   intra-row SPA mask (and causal).
+    q_critical: (B, H, L)    bool   rows whose Q / attention row is computed.
+    q_leader:   (B, H, L)    int32  attention-row recovery map.
+    kv_keep:    (B, H, L)    bool   key/value positions that survive.
+    ffn_critical: (B, L)     bool   tokens whose FFN is computed.
+    ffn_leader: (B, L)       int32  FFN output recovery map.
+    """
+
+    attn_mask: jax.Array
+    q_critical: jax.Array
+    q_leader: jax.Array
+    kv_keep: jax.Array
+    ffn_critical: jax.Array
+    ffn_leader: jax.Array
+
+
+def _dense_plan(B: int, H: int, L: int, causal: bool) -> SparsityPlan:
+    tri = jnp.tril(jnp.ones((L, L), bool)) if causal else jnp.ones((L, L), bool)
+    ar = jnp.arange(L, dtype=jnp.int32)
+    return SparsityPlan(
+        attn_mask=jnp.broadcast_to(tri, (B, H, L, L)),
+        q_critical=jnp.ones((B, H, L), bool),
+        q_leader=jnp.broadcast_to(ar, (B, H, L)),
+        kv_keep=jnp.ones((B, H, L), bool),
+        ffn_critical=jnp.ones((B, L), bool),
+        ffn_leader=jnp.broadcast_to(ar, (B, L)),
+    )
+
+
+def build_plan(x: jax.Array, wq: jax.Array, wk: jax.Array, n_heads: int,
+               cfg: SPLSConfig, valid_len: Optional[int] = None) -> SparsityPlan:
+    """Run the full SPLS prediction pipeline on activations ``x`` (B, L, D)."""
+    B, L, _ = x.shape
+    if not cfg.enabled:
+        return _dense_plan(B, n_heads, L, cfg.causal)
+
+    pam = predicted_attention(x, wq, wk, n_heads, cfg.quant_method,
+                              cfg.quant_bits, causal=cfg.causal)
+    spa, mask = sparsify_pam(pam, cfg.k_ratio)
+    if cfg.causal:
+        # early rows have fewer valid positions than k; top-k may have been
+        # forced onto masked entries -- clear them.
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        mask = mask & tri
+        spa = jnp.where(mask, spa, jnp.zeros_like(spa))
+
+    if cfg.qkv_sparsity:
+        sim: LocalSimilarity = local_similarity(
+            spa, cfg.window, cfg.s_threshold, valid_len=valid_len)
+        q_critical, q_leader = sim.is_critical, sim.leader
+        kv_keep = kv_keep_from_mask(mask)
+    else:
+        ar = jnp.arange(L, dtype=jnp.int32)
+        q_critical = jnp.ones((B, n_heads, L), bool)
+        q_leader = jnp.broadcast_to(ar, (B, n_heads, L))
+        kv_keep = jnp.ones((B, n_heads, L), bool)
+
+    if cfg.ffn_sparsity and cfg.qkv_sparsity:
+        ffn: FFNSparsity = mfi_ffn_sparsity(q_leader, cfg.window, cfg.f_threshold)
+        ffn_critical, ffn_leader = ffn.is_critical, ffn.leader
+    else:
+        ar = jnp.arange(L, dtype=jnp.int32)
+        ffn_critical = jnp.ones((B, L), bool)
+        ffn_leader = jnp.broadcast_to(ar, (B, L))
+
+    # The effective attention row of a similar row is its leader's row; the
+    # leader's mask already encodes intra-row sparsity.  Recovered rows also
+    # must not attend to pruned K/V columns.
+    attn_mask = mask & kv_keep[..., None, :]
+    return SparsityPlan(attn_mask=attn_mask, q_critical=q_critical,
+                        q_leader=q_leader, kv_keep=kv_keep,
+                        ffn_critical=ffn_critical, ffn_leader=ffn_leader)
+
+
+def plan_stats(plan: SparsityPlan) -> dict:
+    """Sparsity ratios (fraction *removed*) per component, as scalars."""
+    q_sparsity = 1.0 - jnp.mean(plan.q_critical.astype(jnp.float32))
+    kv_sparsity = 1.0 - jnp.mean(plan.kv_keep.astype(jnp.float32))
+    attn_keep = jnp.mean(plan.attn_mask.astype(jnp.float32))
+    # attention rows actually computed
+    row_keep = jnp.mean(plan.q_critical.astype(jnp.float32))
+    ffn_sparsity = 1.0 - jnp.mean(plan.ffn_critical.astype(jnp.float32))
+    return {
+        "q_sparsity": q_sparsity,
+        "kv_sparsity": kv_sparsity,
+        "attn_mask_keep": attn_keep,
+        "attn_effective_keep": attn_keep * row_keep,
+        "ffn_sparsity": ffn_sparsity,
+    }

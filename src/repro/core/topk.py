@@ -1,0 +1,63 @@
+"""Row-wise top-k pruning of the PAM -> Sparsified Predicted Attention (SPA).
+
+The SPA keeps, for every attention row, only the ``ceil(k_ratio * L)``
+largest predicted scores (intra-row sparsity).  It drives three things:
+  * the intra-row attention mask used in the formal computation,
+  * the inputs of the local-similarity stage (distances are computed on the
+    SPA, not the dense PAM -- Sec. III-C explains why this *increases* Q
+    sparsity),
+  * K/V column pruning: columns that are empty in the SPA are dead.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["row_topk_mask", "sparsify_pam", "kv_keep_from_mask", "topk_count"]
+
+
+def topk_count(L: int, k_ratio: float) -> int:
+    """Number of kept entries per row; at least 1."""
+    return max(1, min(L, math.ceil(k_ratio * L)))
+
+
+def row_topk_mask(scores: jax.Array, k: int) -> jax.Array:
+    """Boolean mask keeping exactly ``k`` largest entries of the last axis.
+
+    Ties are broken by position (earlier wins), matching a hardware top-k
+    unit that streams left-to-right.
+    """
+    L = scores.shape[-1]
+    if k >= L:
+        return jnp.ones_like(scores, dtype=bool)
+    _, idx = jax.lax.top_k(scores, k)
+    mask = jnp.zeros(scores.shape, dtype=bool)
+    mask = jnp.put_along_axis(mask, idx, jnp.ones(idx.shape, dtype=bool),
+                              axis=-1, inplace=False)
+    return mask
+
+
+def sparsify_pam(pam: jax.Array, k_ratio: float) -> Tuple[jax.Array, jax.Array]:
+    """PAM -> (SPA values, boolean keep-mask).
+
+    SPA has the dropped entries zeroed; the similarity stage treats "not
+    selected" as exactly zero, which is what a hardware SPA buffer holds.
+    """
+    L = pam.shape[-1]
+    k = topk_count(L, k_ratio)
+    mask = row_topk_mask(pam, k)
+    spa = jnp.where(mask, pam, jnp.zeros_like(pam))
+    return spa, mask
+
+
+def kv_keep_from_mask(mask: jax.Array) -> jax.Array:
+    """Column-based K/V sparsification (Sec. III-C).
+
+    A key/value position survives iff *any* SPA row references it.  Input
+    mask: (..., H, L, L); output keep: (..., H, L) boolean over key positions.
+    """
+    return jnp.any(mask, axis=-2)

@@ -1,0 +1,3 @@
+"""Deterministic, restart-safe data pipeline."""
+
+from .pipeline import DataConfig, data_iterator, synthetic_batch

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import hlog_project
+
+__all__ = ["hlog_qmatmul_ref", "flash_attention_ref",
+           "local_similarity_ref", "flash_decode_ref"]
+
+
+def hlog_qmatmul_ref(xq: jax.Array, wq: jax.Array) -> jax.Array:
+    """HLog-projected matmul on integer-valued inputs.
+
+    xq: (M, K) int-valued float32 (post 8-bit symmetric quantization);
+    wq: (K, N) likewise.  Returns hlog(xq) @ hlog(wq) in float32 -- the PAM
+    prediction matmul of Sec. IV-B, numerically identical to the bit-level
+    SD/SJA/converter datapath.
+    """
+    return hlog_project(xq) @ hlog_project(wq)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        kv_keep: Optional[jax.Array] = None) -> jax.Array:
+    """Dense-softmax oracle.  q,k,v: (B, H, L, Dh); kv_keep: (B, H, Lk)."""
+    B, H, L, Dh = q.shape
+    Lk = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * (Dh ** -0.5)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    i = jnp.arange(L)[:, None]
+    j = jnp.arange(Lk)[None, :]
+    m = (j <= i) if causal else jnp.ones((L, Lk), bool)
+    if window is not None:
+        m = m & (i - j < window)
+    if kv_keep is not None:
+        m = m & kv_keep[:, :, None, :]
+    s = jnp.where(m, s, -jnp.inf)
+    a = jax.nn.softmax(s, axis=-1)
+    a = jnp.where(jnp.isnan(a), 0.0, a)  # fully-masked rows -> zero output
+    return jnp.einsum("bhqk,bhkd->bhqd", a, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def local_similarity_ref(spa: jax.Array, w: int) -> jax.Array:
+    """Windowed pairwise (unnormalized) L1 distances.
+
+    spa: (B, H, L, Lk) with L % w == 0 -> (B, H, L//w, w, w) float32.
+    """
+    B, H, L, Lk = spa.shape
+    assert L % w == 0
+    xp = spa.reshape(B, H, L // w, w, Lk).astype(jnp.float32)
+    return jnp.abs(xp[..., :, None, :] - xp[..., None, :, :]).sum(-1)
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, softcap: Optional[float] = None,
+                     window: Optional[int] = None) -> jax.Array:
+    """Dense decode oracle.  q: (B, KV, G, Dh); k/v: (B, KV, S, Dh)."""
+    S = k.shape[2]
+    Dh = q.shape[-1]
+    s = jnp.einsum("bkgd,bkld->bkgl", q, k).astype(jnp.float32) * Dh ** -0.5
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    j = jnp.arange(S)
+    m = j[None, :] <= pos[:, None]
+    if window is not None:
+        m = m & (pos[:, None] - j[None, :] < window)
+    s = jnp.where(m[:, None, None, :], s, -jnp.inf)
+    a = jax.nn.softmax(s, axis=-1)
+    a = jnp.where(jnp.isnan(a), 0.0, a)
+    return jnp.einsum("bkgl,bkld->bkgd", a,
+                      v.astype(jnp.float32)).astype(q.dtype)

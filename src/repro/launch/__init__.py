@@ -1,0 +1,9 @@
+"""Launchers: production mesh, dry-run, training and serving entry points.
+
+NOTE: do not import ``dryrun`` from here -- it sets XLA_FLAGS at import time
+and must only run as __main__ in a fresh process.
+"""
+
+from .mesh import make_cpu_mesh, make_production_mesh, mesh_axis_sizes
+from .steps import (make_loss_grad, make_prefill_step, make_serve_step,
+                    make_train_step)

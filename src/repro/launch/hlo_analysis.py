@@ -1,0 +1,216 @@
+"""Roofline-term extraction from compiled (post-SPMD, post-fusion) HLO text.
+
+Why parse text at all?  ``compiled.cost_analysis()`` on the CPU backend
+counts every ``while`` body exactly once -- but layer stacks are scanned, so
+a 126-layer model would be undercounted 126x.  And collective bytes are not
+reported at all.  We therefore walk the computation call graph ourselves:
+
+  * ``while`` trip counts come from ``backend_config known_trip_count``
+    (fallback: the compare constant in the condition computation);
+  * FLOPs: 2 * prod(out_shape) * prod(lhs_contracting_dims) per ``dot``
+    (matmuls dominate transformer FLOPs; elementwise ops are not counted --
+    the compute roofline term is an MXU term);
+  * HBM traffic: operand + result bytes of every materializing instruction
+    (fusion boundaries in the optimized HLO are exactly the points where
+    buffers hit memory);
+  * collective bytes per op type (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), result-shape sized.
+
+All numbers are PER DEVICE: the HLO is the per-device SPMD program.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+__all__ = ["parse_hlo_stats", "parse_hlo_collectives", "collective_bytes"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_SKIP_OPS = {"bitcast", "tuple", "get-tuple-element", "parameter",
+             "constant", "after-all", "partition-id", "replica-id",
+             "opt-barrier", "iota"}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
+# name = <shape (possibly a tuple with layouts)> <op>(%operand...
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((?=%|\)|s32|f32|bf16|pred|u32)")
+_SHAPE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_WHILE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_TRIPS = re.compile(r'known_trip_count.{0,8}?"n"\s*:\s*"?(\d+)')
+_CONST = re.compile(r"%?([\w\.\-]+)\s*=\s*s(?:32|64)\[\]\s*constant\((\d+)\)")
+_COMPARE = re.compile(r"compare\(([^)]*)\)")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_HDR_PARAM = re.compile(r"([\w\.\-]+):\s*((?:" + "|".join(_DTYPE_BYTES)
+                        + r")\[[0-9,]*\]|\([^)]*\))")
+_DOT_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(text: str) -> Tuple[str, List[int]]:
+    m = _SHAPE.search(text)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+class _HLO:
+    def __init__(self, hlo: str):
+        self.comps: Dict[str, List[str]] = {}
+        self.entry = None
+        self.shapes: Dict[str, str] = {}   # instr name -> shape text
+        cur = None
+        for line in hlo.splitlines():
+            if line[:1] not in (" ", "\t", ""):
+                m = _COMP_HDR.match(line)
+                if m:
+                    cur = m.group(1)
+                    self.comps[cur] = []
+                    if line.startswith("ENTRY"):
+                        self.entry = cur
+                    for pname, pshape in _HDR_PARAM.findall(line):
+                        self.shapes[pname] = pshape
+                    continue
+            s = line.strip()
+            if cur is not None and s and s != "}":
+                self.comps[cur].append(s)
+                mi = _INSTR.match(line)
+                if mi:
+                    self.shapes[mi.group(1)] = mi.group(2)
+
+    def trip_count(self, while_line: str, cond: str) -> int:
+        m = _TRIPS.search(while_line)
+        if m:
+            return int(m.group(1))
+        consts = {}
+        for ln in self.comps.get(cond, []):
+            for name, val in _CONST.findall(ln):
+                consts[name] = int(val)
+        for ln in self.comps.get(cond, []):
+            mc = _COMPARE.search(ln)
+            if mc:
+                for name, val in consts.items():
+                    if name in mc.group(1):
+                        return val
+        return max(consts.values()) if consts else 1
+
+
+def parse_hlo_stats(hlo: str) -> Dict[str, float]:
+    """Trip-corrected per-device {dot_flops, traffic_bytes, coll:*, total}."""
+    H = _HLO(hlo)
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def analyze(name: str, stack: tuple) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        out: Dict[str, float] = defaultdict(float)
+        for ln in H.comps.get(name, []):
+            mi = _INSTR.match(ln)
+            if not mi:
+                continue
+            iname, rshape, op = mi.groups()
+            if op == "while":
+                mw = _WHILE.search(ln)
+                if mw and mw.group(2) not in stack:
+                    trips = H.trip_count(ln, mw.group(1))
+                    inner = analyze(mw.group(2), stack + (name,))
+                    for k, v in inner.items():
+                        out[k] += v * trips
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for callee in re.findall(
+                        r"(?:to_apply|called_computations=\{)%?([\w\.\-]+)",
+                        ln):
+                    if callee in H.comps and callee not in stack:
+                        inner = analyze(callee, stack + (name,))
+                        for k, v in inner.items():
+                            out[k] += v
+                continue
+            if op in _SKIP_OPS:
+                continue
+
+            result_bytes = _shape_bytes(rshape)
+            # operand bytes: arguments inside the op's parens
+            paren = ln[ln.index(op + "(") + len(op) + 1:]
+            depth, args = 1, ""
+            for ch in paren:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                args += ch
+            operand_bytes = 0
+            for oname in _OPERANDS.findall(args):
+                operand_bytes += _shape_bytes(H.shapes.get(oname, ""))
+
+            base_op = op.replace("-start", "").replace("-done", "")
+            if base_op in _COLL_OPS:
+                if op.endswith("-done"):
+                    continue
+                out[f"coll:{base_op}"] += result_bytes
+                out["traffic_bytes"] += result_bytes + operand_bytes
+                continue
+
+            out["traffic_bytes"] += result_bytes + operand_bytes
+            if op == "dot":
+                _, odims = _first_shape_dims(rshape)
+                oelems = 1
+                for d in odims:
+                    oelems *= d
+                lhs = _OPERANDS.findall(args)
+                cd = _DOT_CDIMS.search(ln)
+                k = 1
+                if lhs and cd is not None:
+                    _, ldims = _first_shape_dims(H.shapes.get(lhs[0], ""))
+                    if cd.group(1):
+                        for idx in cd.group(1).split(","):
+                            i = int(idx)
+                            if i < len(ldims):
+                                k *= ldims[i]
+                out["dot_flops"] += 2.0 * oelems * k
+        memo[name] = dict(out)
+        return memo[name]
+
+    totals = analyze(H.entry, ()) if H.entry else {}
+    result = {"dot_flops": totals.get("dot_flops", 0.0),
+              "traffic_bytes": totals.get("traffic_bytes", 0.0)}
+    coll_total = 0.0
+    for k, v in totals.items():
+        if k.startswith("coll:"):
+            result[k] = v
+            coll_total += v
+    result["collective_bytes"] = coll_total
+    return result
+
+
+def parse_hlo_collectives(hlo: str) -> Dict[str, int]:
+    """Back-compat wrapper: per-op-type collective bytes + total."""
+    stats = parse_hlo_stats(hlo)
+    out = {k[5:]: int(v) for k, v in stats.items() if k.startswith("coll:")}
+    out["total"] = int(stats.get("collective_bytes", 0))
+    return out
+
+
+def collective_bytes(compiled) -> Dict[str, int]:
+    return parse_hlo_collectives(compiled.as_text())

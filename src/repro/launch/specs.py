@@ -1,0 +1,86 @@
+"""Abstract input specs (ShapeDtypeStruct stand-ins) for every
+(architecture x input-shape x step-kind) cell -- no device allocation.
+
+``train_*`` cells lower ``train_step``; ``prefill_*`` cells lower the
+prefill step (where the SPLS technique runs); ``decode_*`` / ``long_*``
+cells lower ``serve_step`` -- one new token against a KV cache of seq_len,
+per the assignment.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.models import init_cache
+from repro.models.common import dtype_of
+from repro.models.model import abstract_params
+from repro.sharding.rules import (batch_sharding, cache_sharding,
+                                  param_sharding)
+
+__all__ = ["input_specs", "abstract_params_sharded", "abstract_cache_sharded"]
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def abstract_params_sharded(cfg: ArchConfig, mesh: Mesh):
+    ab = abstract_params(cfg)
+    shd = param_sharding(cfg, mesh, ab)
+    return jax.tree.map(lambda a, s: _sds(a.shape, a.dtype, s), ab, shd), shd
+
+
+def abstract_cache_sharded(cfg: ArchConfig, mesh: Mesh, batch: int,
+                           max_len: int):
+    ab = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    shd = cache_sharding(cfg, mesh, ab, batch, max_len)
+    return jax.tree.map(lambda a, s: _sds(a.shape, a.dtype, s), ab, shd), shd
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh
+                ) -> Dict[str, Any]:
+    """Abstract step inputs for one cell.
+
+    Returns a dict with key "kind" plus the abstract arguments:
+      train:   params, batch {inputs, labels}
+      prefill: params, inputs
+      decode:  params, cache, tokens, pos
+    """
+    B, L = shape.global_batch, shape.seq_len
+    bsh = batch_sharding(mesh, B)
+    cdt = dtype_of(cfg.compute_dtype)
+    params, pshard = abstract_params_sharded(cfg, mesh)
+
+    if shape.kind == "train":
+        if cfg.input_mode == "tokens":
+            inputs = _sds((B, L), jnp.int32, bsh)
+        else:
+            inputs = _sds((B, L, cfg.d_model), cdt, bsh)
+        batch = {"inputs": inputs, "labels": _sds((B, L), jnp.int32, bsh)}
+        return {"kind": "train", "params": params, "param_sharding": pshard,
+                "batch": batch}
+
+    if shape.kind == "prefill":
+        if cfg.input_mode == "tokens":
+            inputs = _sds((B, L), jnp.int32, bsh)
+        else:
+            inputs = _sds((B, L, cfg.d_model), cdt, bsh)
+        return {"kind": "prefill", "params": params,
+                "param_sharding": pshard, "inputs": inputs}
+
+    # decode: one new token, cache holds seq_len positions
+    cache, cshard = abstract_cache_sharded(cfg, mesh, B, L)
+    if cfg.input_mode == "tokens":
+        tokens = _sds((B, 1), jnp.int32, bsh)
+    else:
+        tokens = _sds((B, 1, cfg.d_model), cdt, bsh)
+    pos = _sds((B,), jnp.int32, bsh)
+    return {"kind": "decode", "params": params, "param_sharding": pshard,
+            "cache": cache, "cache_sharding": cshard, "tokens": tokens,
+            "pos": pos}

@@ -1,0 +1,58 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``.
+
+Runs the production Trainer (checkpoint/restart, straggler tracking) on the
+local devices with the smoke-scale config by default, or lowers the full
+config when ``--dry-run`` is given (no allocation).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full arch config (default: smoke-scale)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--spls", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.configs.registry import get_config
+    from repro.data.pipeline import DataConfig
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.smoke()
+        cfg = dataclasses.replace(cfg, remat=False)
+    if args.spls and cfg.has_attn:
+        from repro.core.spls import SPLSConfig
+        cfg = dataclasses.replace(cfg, spls=SPLSConfig(
+            enabled=True, k_ratio=0.2, s_threshold=0.6, f_threshold=2,
+            window=4, causal=cfg.causal))
+
+    data_cfg = DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.global_batch,
+        input_mode=cfg.input_mode, d_model=cfg.d_model)
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every, peak_lr=args.lr,
+                         n_micro=args.n_micro)
+    out = Trainer(cfg, tcfg, data_cfg).run()
+    print(json.dumps(out["metrics"][-3:], indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

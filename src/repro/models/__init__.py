@@ -1,0 +1,12 @@
+"""Composable model definitions (pure JAX, functional parameters)."""
+
+from .common import apply_rope, layer_norm, rms_norm, rope_freqs, softcap
+from .attention import (KVCache, attention_decode, attention_forward,
+                        init_attention, init_kv_cache)
+from .moe import (ffn_forward, init_ffn, init_mlp, init_moe, mlp_forward,
+                  moe_forward)
+from .mamba import (MambaCache, init_mamba, init_mamba_cache, mamba_decode,
+                    mamba_forward, ssd_chunked)
+from .blocks import block_decode, block_forward, init_block, init_block_cache
+from .model import (abstract_params, decode_step, forward, init_cache,
+                    init_params, loss_fn, prefill)

@@ -1,0 +1,316 @@
+"""GQA attention with RoPE, qk-norm, sliding window, logit soft-capping,
+KV-cache decode, and SPLS sparse execution.
+
+Head layout & tensor parallelism.  Weights keep an explicit (KV, G)
+structure (``G = n_heads // n_kv_heads`` query heads per KV group); at trace
+time :func:`head_shard_mode` picks how heads bind to the mesh's model axis:
+
+  * **structured** -- KV (or G) divides the model axis: shard that axis
+    directly; attention einsums stay local (llama3 kv=8 < 16 shards G=16,
+    gemma2/olmoe shard KV=16).
+  * **flat** -- neither divides but H = KV*G does (h2o/dbrx/jamba/pixtral:
+    kv=8, G<16, H%16==0): flatten heads, repeat the (small, replicated) KV
+    heads locally per device -- no communication, each device materializes
+    only its H/|model| KV copies.
+  * **replicated** -- nothing divides (musicgen H=24): attention replicates
+    over the model axis; TP still comes from FFN + vocab.  Noted in
+    DESIGN.md.
+
+Long sequences use a KV-chunked online-softmax scan (the flash-attention
+recurrence in XLA) so scores never materialize at O(L^2); on real TPU the
+Pallas kernel in ``repro.kernels.flash_attention`` replaces it 1:1.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.spls import SparsityPlan
+from repro.core.sparse_exec import spls_attention, spls_attention_packed
+from repro.sharding.logical import constrain
+from .common import apply_rope, dense_init, rms_norm, rope_freqs, softcap
+
+__all__ = ["init_attention", "attention_forward", "attention_decode",
+           "KVCache", "init_kv_cache", "head_shard_mode"]
+
+# KV-chunked attention kicks in above this length (keeps scores << O(L^2))
+_CHUNK_THRESHOLD = 8192
+_KV_CHUNK = 2048
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, KV, S_max, Dh)
+    v: jax.Array          # (B, KV, S_max, Dh)
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
+    kv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    z = jnp.zeros((batch, kv, max_len, dh), dtype)
+    return KVCache(k=z, v=z)
+
+
+def head_shard_mode(cfg: ArchConfig) -> str:
+    """'structured' | 'flat' | 'replicated' -- see module docstring."""
+    from repro.sharding.logical import _current_mesh
+    mesh = _current_mesh()
+    if mesh is None:
+        return "structured"
+    m = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    KV = cfg.n_kv_heads
+    G = cfg.n_heads // max(KV, 1)
+    if m <= 1 or KV % m == 0 or G % m == 0:
+        return "structured"
+    if cfg.n_heads % m == 0:
+        return "flat"
+    return "padded"
+
+
+def _pad_heads_to(cfg: ArchConfig) -> int:
+    """Padded head count for 'padded' mode: next multiple of |model|.
+
+    Beyond-paper optimization (EXPERIMENTS.md §Perf, musicgen cell): when no
+    head factorization divides the model axis (H=24 on 16), the projections
+    are zero-padded to H'=32 *at trace time*.  Padded heads produce garbage
+    attention outputs but their ``wo`` rows are zero, so the block output is
+    bit-identical -- and attention compute/memory shards 16-way instead of
+    replicating.
+    """
+    from repro.sharding.logical import _current_mesh
+    mesh = _current_mesh()
+    m = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    H = cfg.n_heads
+    return -(-H // m) * m
+
+
+def init_attention(cfg: ArchConfig, key: jax.Array, dtype) -> dict:
+    D, KV, Dh = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
+    G = cfg.n_heads // KV
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, KV, G, Dh), dtype, fan_in=D),
+        "wk": dense_init(ks[1], (D, KV, Dh), dtype, fan_in=D),
+        "wv": dense_init(ks[2], (D, KV, Dh), dtype, fan_in=D),
+        "wo": dense_init(ks[3], (KV, G, Dh, D), dtype, fan_in=KV * G * Dh),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((Dh,), dtype)
+        p["k_norm"] = jnp.zeros((Dh,), dtype)
+    return p
+
+
+def _project_qkv(cfg: ArchConfig, p: dict, x: jax.Array, positions: jax.Array,
+                 mode: str = "structured"):
+    """x (B, L, D) -> q (B, KV', G', L, Dh), k/v (B, KV', L, Dh).
+
+    structured: KV' = KV, G' = G.   flat: KV' = H, G' = 1 (KV repeated).
+    """
+    B, L, D = x.shape
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    G = cfg.n_heads // KV
+    if mode in ("flat", "padded"):
+        H = KV * G
+        wq = p["wq"].reshape(D, H, Dh)
+        wk, wv = p["wk"], p["wv"]
+        if mode == "padded":
+            Hp = _pad_heads_to(cfg)
+            wq = jnp.pad(wq, ((0, 0), (0, Hp - H), (0, 0)))
+            # pad KV to H' as well (each padded head attends independently)
+            wk = jnp.pad(jnp.repeat(wk, G, axis=1),
+                         ((0, 0), (0, Hp - H), (0, 0)))
+            wv = jnp.pad(jnp.repeat(wv, G, axis=1),
+                         ((0, 0), (0, Hp - H), (0, 0)))
+            G = 1  # KV now per-head
+        q = jnp.einsum("bld,dhe->bhle", x, wq)
+        q = constrain(q, ("batch", "heads", "seq", None))
+        k = jnp.einsum("bld,dkh->bklh", x, wk)
+        v = jnp.einsum("bld,dkh->bklh", x, wv)
+        if mode == "flat":
+            k = jnp.repeat(k, G, axis=1)
+            v = jnp.repeat(v, G, axis=1)
+        k = constrain(k, ("batch", "heads", "seq", None))
+        v = constrain(v, ("batch", "heads", "seq", None))
+        q = q[:, :, None]  # (B, H', 1, L, Dh)
+    else:
+        q = jnp.einsum("bld,dkgh->bkglh", x, p["wq"])
+        k = jnp.einsum("bld,dkh->bklh", x, p["wk"])
+        v = jnp.einsum("bld,dkh->bklh", x, p["wv"])
+        q = constrain(q, ("batch", "kv_heads", "qgroups", "seq", None))
+        k = constrain(k, ("batch", "kv_heads", "seq", None))
+        v = constrain(v, ("batch", "kv_heads", "seq", None))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    sin, cos = rope_freqs(positions, Dh, cfg.rope_theta)
+    q = apply_rope(q, sin[:, None, None], cos[:, None, None])
+    k = apply_rope(k, sin[:, None], cos[:, None])
+    return q, k, v
+
+
+def _out_proj(cfg: ArchConfig, p: dict, o: jax.Array, mode: str) -> jax.Array:
+    """o (B, KV', G', L, Dh) -> (B, L, D)."""
+    KV, Dh, D = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.d_model
+    G = cfg.n_heads // KV
+    if mode in ("flat", "padded"):
+        wo = p["wo"].reshape(KV * G, Dh, D)
+        if mode == "padded":
+            Hp = _pad_heads_to(cfg)
+            # zero wo rows for padded heads -> output bit-identical
+            wo = jnp.pad(wo, ((0, Hp - KV * G), (0, 0), (0, 0)))
+        out = jnp.einsum("bhld,hdm->blm", o[:, :, 0], wo)
+    else:
+        out = jnp.einsum("bkgld,kgdm->blm", o, p["wo"])
+    return constrain(out, ("batch", "seq", "embed"))
+
+
+def _band_mask(L: int, window: Optional[int], causal: bool) -> jax.Array:
+    i = jnp.arange(L)[:, None]
+    j = jnp.arange(L)[None, :]
+    m = (j <= i) if causal else jnp.ones((L, L), bool)
+    if window is not None:
+        m = m & (i - j < window) & (j - i < (1 if causal else window))
+    return m
+
+
+def _dense_scores_attention(cfg, q, k, v, window, L):
+    """Materialized-scores path for short L (cheap, single softmax)."""
+    s = jnp.einsum("bkgqd,bkld->bkgql", q, k) * (q.shape[-1] ** -0.5)
+    s = softcap(s, cfg.attn_softcap)
+    m = _band_mask(L, window, cfg.causal)
+    s = jnp.where(m, s, jnp.asarray(-1e30, s.dtype))
+    a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgql,bkld->bkgqd", a, v)
+
+
+def _chunked_attention(cfg, q, k, v, window, L):
+    """KV-chunked online-softmax (flash recurrence in XLA).
+
+    Scans KV chunks; running (max, denom, acc) carry.  Memory is
+    O(L * chunk) per head instead of O(L^2).  The Pallas kernel performs
+    the true block skip on TPU; under lax.scan all chunks are computed.
+    """
+    B, KVp, Gp, Lq, Dh = q.shape
+    C = _KV_CHUNK
+    nC = L // C
+    scale = Dh ** -0.5
+    qi = jnp.arange(Lq)
+
+    def body(carry, ck):
+        m_run, l_run, acc = carry
+        k_c, v_c, c0 = ck
+        s = jnp.einsum("bkgqd,bkld->bkgql", q, k_c).astype(jnp.float32) * scale
+        s = softcap(s, cfg.attn_softcap)
+        kj = c0 + jnp.arange(C)
+        mask = jnp.ones((Lq, C), bool)
+        if cfg.causal:
+            mask &= kj[None, :] <= qi[:, None]
+        if window is not None:
+            mask &= qi[:, None] - kj[None, :] < window
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m_run, s.max(-1))
+        corr = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None]) * mask.astype(jnp.float32)
+        l_new = l_run * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgql,bkld->bkgqd", p.astype(v_c.dtype), v_c).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    kc = k.reshape(B, KVp, nC, C, Dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, KVp, nC, C, Dh).transpose(2, 0, 1, 3, 4)
+    offs = jnp.arange(nC) * C
+    init = (jnp.full((B, KVp, Gp, Lq), -1e30, jnp.float32),
+            jnp.zeros((B, KVp, Gp, Lq), jnp.float32),
+            jnp.zeros((B, KVp, Gp, Lq, Dh), jnp.float32))
+    (m_f, l_f, acc), _ = jax.lax.scan(body, init, (kc, vc, offs))
+    out = acc / jnp.maximum(l_f, 1e-9)[..., None]
+    return out.astype(q.dtype)
+
+
+def attention_forward(cfg: ArchConfig, p: dict, x: jax.Array,
+                      window: Optional[int] = None,
+                      plan: Optional[SparsityPlan] = None,
+                      q_capacity: Optional[int] = None,
+                      kv_capacity: Optional[int] = None,
+                      cache_len: Optional[int] = None):
+    """Full-sequence attention.  x: (B, L, D) -> (B, L, D).
+
+    With ``cache_len`` set, also returns a right-padded KVCache (prefill);
+    the cache always stores the compact (B, KV, S, Dh) layout.
+    """
+    B, L, D = x.shape
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    G = cfg.n_heads // KV
+    mode = head_shard_mode(cfg)
+    positions = jnp.broadcast_to(jnp.arange(L), (B, L))
+    q, k, v = _project_qkv(cfg, p, x, positions, mode)
+    KVp, Gp = q.shape[1], q.shape[2]
+
+    if plan is not None:
+        from repro.core.spls_chunked import ChunkedPlan
+        from repro.core.sparse_exec import spls_attention_chunked
+        if isinstance(plan, ChunkedPlan):
+            # long-sequence progressive path: packed + chunked, no O(L^2)
+            o = spls_attention_chunked(
+                q, k, v, plan, q_capacity or L, kv_capacity or L,
+                Dh ** -0.5, cfg.attn_softcap, causal=cfg.causal)
+        else:
+            # SPLS path (simulation / capacity semantics); plan tensors
+            # share the (KV', G') layout produced by build_block_plan.
+            kr = jnp.broadcast_to(k[:, :, None], (B, KVp, Gp, L, Dh))
+            vr = jnp.broadcast_to(v[:, :, None], (B, KVp, Gp, L, Dh))
+            if q_capacity is not None and q_capacity < L:
+                o = spls_attention_packed(q, kr, vr, plan, q_capacity,
+                                          kv_capacity or L, Dh ** -0.5,
+                                          cfg.attn_softcap)
+            else:
+                o = spls_attention(q, kr, vr, plan, Dh ** -0.5,
+                                   cfg.attn_softcap)
+    elif L > _CHUNK_THRESHOLD and L % _KV_CHUNK == 0:
+        o = _chunked_attention(cfg, q, k, v, window, L)
+    else:
+        o = _dense_scores_attention(cfg, q, k, v, window, L)
+
+    out = _out_proj(cfg, p, o, mode)
+    if cache_len is not None:
+        kc = k.reshape(B, KV, G, L, Dh)[:, :, 0] if mode == "flat" else k
+        vc = v.reshape(B, KV, G, L, Dh)[:, :, 0] if mode == "flat" else v
+        pad = [(0, 0), (0, 0), (0, cache_len - L), (0, 0)]
+        return out, KVCache(k=jnp.pad(kc, pad), v=jnp.pad(vc, pad))
+    return out
+
+
+def attention_decode(cfg: ArchConfig, p: dict, x: jax.Array, cache: KVCache,
+                     pos: jax.Array, window: Optional[int] = None):
+    """One-token decode.  x: (B, 1, D); pos: (B,) current write index.
+
+    Returns (out (B, 1, D), new_cache).  The cache is pre-allocated at
+    max_len; masking handles both not-yet-written and out-of-window slots.
+    Decode keeps the structured layout: the cache stays (B, KV, S, Dh) and
+    scores shard over whatever the cache sharding chose (kv heads or seq).
+    """
+    B, _, D = x.shape
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    G = cfg.n_heads // KV
+    q, k_new, v_new = _project_qkv(cfg, p, x, pos[:, None], "structured")
+
+    # per-row scatter of the new KV at `pos` (cheap: no full-cache math)
+    upd = jax.vmap(
+        lambda c, n, pb: jax.lax.dynamic_update_slice(c, n, (0, pb, 0)))
+    k_all = upd(cache.k, k_new, pos)
+    v_all = upd(cache.v, v_new, pos)
+
+    S = k_all.shape[2]
+    s = jnp.einsum("bkgqd,bkld->bkgql", q, k_all) * (Dh ** -0.5)
+    s = softcap(s, cfg.attn_softcap)
+    j = jnp.arange(S)[None, :]
+    m = j <= pos[:, None]
+    if window is not None:
+        m = m & (pos[:, None] - j < window)
+    s = jnp.where(m[:, None, None, None, :], s, jnp.asarray(-1e30, s.dtype))
+    a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgql,bkld->bkgqd", a, v_all)
+    out = _out_proj(cfg, p, o, "structured")
+    return out, KVCache(k=k_all, v=v_all)

@@ -1,0 +1,252 @@
+"""Transformer / Mamba blocks with first-class SPLS integration.
+
+A block = (pre-norm -> mixer -> residual) + optional (pre-norm -> FFN ->
+residual), with optional gemma2-style post-norms.  When SPLS is enabled and
+the mixer is attention, the block runs the paper's pipeline: the plan is
+built from the *normalized block input* and the attention projection weights
+-- i.e. prediction happens before QKV generation, exactly as in Fig. 5(a) --
+then attention and the FFN execute sparsely under the plan.
+
+SPLS applicability (DESIGN.md §Arch-applicability): attention-free (mamba)
+blocks have no PAM to predict, so SPLS does not apply to them; in hybrid
+archs the attention blocks still use it.  FFN sparsity requires per-head
+leaders, so it also only triggers in attention blocks.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockCfg
+from repro.core.spls import SparsityPlan, build_plan
+from repro.core.sparse_exec import spls_ffn, spls_ffn_packed
+from .attention import (KVCache, attention_decode, attention_forward,
+                        init_attention, init_kv_cache)
+from .common import rms_norm
+from .mamba import (MambaCache, init_mamba, init_mamba_cache, mamba_decode,
+                    mamba_forward)
+from .moe import ffn_forward, init_ffn
+
+__all__ = ["init_block", "block_forward", "block_decode", "init_block_cache",
+           "build_block_plan"]
+
+
+def init_block(cfg: ArchConfig, blk: BlockCfg, key: jax.Array, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    p = {"ln1": jnp.zeros((cfg.d_model,), dtype)}
+    if blk.mixer == "attn":
+        p["attn"] = init_attention(cfg, ks[0], dtype)
+    else:
+        p["mamba"] = init_mamba(cfg, ks[0], dtype)
+    if blk.has_ffn:
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ffn"] = init_ffn(cfg, blk.use_moe, ks[1], dtype)
+    if cfg.use_post_norm:
+        p["post_ln1"] = jnp.zeros((cfg.d_model,), dtype)
+        if blk.has_ffn:
+            p["post_ln2"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def init_block_cache(cfg: ArchConfig, blk: BlockCfg, batch: int, max_len: int,
+                     dtype):
+    if blk.mixer == "attn":
+        return init_kv_cache(cfg, batch, max_len, dtype)
+    return init_mamba_cache(cfg, batch, dtype)
+
+
+def build_block_plan(cfg: ArchConfig, p: dict, xn: jax.Array
+                     ) -> Optional[SparsityPlan]:
+    """Run SPLS prediction on the normalized block input (before QKV gen).
+
+    Plan tensors use the TP-friendly (B, KV, G, ...) head layout so the
+    whole prediction pipeline (HLog matmuls, top-k, windowed similarity)
+    shards over the same axes as the formal attention -- no resharding
+    between prediction and execution.
+    """
+    if not cfg.spls.enabled:
+        return None
+    import dataclasses
+
+    from repro.core import mfi as _mfi
+    from repro.core import similarity as _sim
+    from repro.core import topk as _topk
+    from repro.core.predict import predict_qk
+    from repro.sharding.logical import constrain as _cn
+
+    D, KV, Dh = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
+    G = cfg.n_heads // KV
+    B, L, _ = xn.shape
+    scfg = cfg.spls
+    if scfg.causal != cfg.causal:
+        scfg = dataclasses.replace(scfg, causal=cfg.causal)
+
+    from .attention import head_shard_mode
+    mode = head_shard_mode(cfg)
+    wq = p["attn"]["wq"].reshape(D, KV * G * Dh)
+    wk = p["attn"]["wk"].reshape(D, KV * Dh)
+    qp, kp = predict_qk(xn, wq, wk, scfg.quant_method, scfg.quant_bits)
+    if mode == "flat":  # (B, H, 1, L, *) layout matching attention_forward
+        H = KV * G
+        qh = qp.reshape(B, L, H, Dh).transpose(0, 2, 1, 3)[:, :, None]
+        kh = kp.reshape(B, L, KV, Dh).transpose(0, 2, 1, 3)
+        kh = jnp.repeat(kh, G, axis=1)
+        qh = _cn(qh, ("batch", "heads", None, "seq", None))
+        kh = _cn(kh, ("batch", "heads", "seq", None))
+    else:
+        qh = qp.reshape(B, L, KV, G, Dh).transpose(0, 2, 3, 1, 4)
+        kh = kp.reshape(B, L, KV, Dh).transpose(0, 2, 1, 3)
+        qh = _cn(qh, ("batch", "kv_heads", "qgroups", "seq", None))
+    pam = jnp.einsum("bkgqd,bkld->bkgql", qh, kh) * (Dh ** -0.5)
+    if scfg.causal:
+        neg = jnp.asarray(jnp.finfo(pam.dtype).min / 2, pam.dtype)
+        tri = jnp.tril(jnp.ones((L, L), dtype=bool))
+        pam = jnp.where(tri, pam, neg)
+
+    spa, mask = _topk.sparsify_pam(pam, scfg.k_ratio)
+    if scfg.causal:
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        mask = mask & tri
+        spa = jnp.where(mask, spa, jnp.zeros_like(spa))
+    sim = _sim.local_similarity(spa, scfg.window, scfg.s_threshold)
+    kv_keep = _topk.kv_keep_from_mask(mask)
+    if scfg.ffn_sparsity:
+        # MFI votes across all H = KV*G heads
+        leaders_h = sim.leader.reshape(B, KV * G, L)
+        ffn = _mfi.mfi_ffn_sparsity(leaders_h, scfg.window, scfg.f_threshold)
+        ffn_crit, ffn_leader = ffn.is_critical, ffn.leader
+    else:
+        ar = jnp.arange(L, dtype=jnp.int32)
+        ffn_crit = jnp.ones((B, L), bool)
+        ffn_leader = jnp.broadcast_to(ar, (B, L))
+    return SparsityPlan(attn_mask=mask & kv_keep[..., None, :],
+                        q_critical=sim.is_critical, q_leader=sim.leader,
+                        kv_keep=kv_keep, ffn_critical=ffn_crit,
+                        ffn_leader=ffn_leader)
+
+
+def build_block_plan_chunked(cfg: ArchConfig, p: dict, xn: jax.Array):
+    """Progressive-generation plan for long sequences (O(row_block * L)).
+
+    Mirrors :func:`build_block_plan` but scans PAM row blocks -- the XLA
+    mapping of the paper's progressive generation scheme (Sec. IV-C).
+    """
+    from repro.core.predict import predict_qk
+    from repro.core.spls_chunked import chunked_plan_scan
+    from repro.sharding.logical import constrain as _cn
+    from .attention import head_shard_mode
+
+    D, KV, Dh = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
+    G = cfg.n_heads // KV
+    B, L, _ = xn.shape
+    scfg = cfg.spls
+    mode = head_shard_mode(cfg)
+    wq = p["attn"]["wq"].reshape(D, KV * G * Dh)
+    wk = p["attn"]["wk"].reshape(D, KV * Dh)
+    qp, kp = predict_qk(xn, wq, wk, scfg.quant_method, scfg.quant_bits)
+    if mode == "flat":
+        H = KV * G
+        qh = qp.reshape(B, L, H, Dh).transpose(0, 2, 1, 3)[:, :, None]
+        kh = jnp.repeat(kp.reshape(B, L, KV, Dh).transpose(0, 2, 1, 3),
+                        G, axis=1)
+        qh = _cn(qh, ("batch", "heads", None, "seq", None))
+        kh = _cn(kh, ("batch", "heads", "seq", None))
+    else:
+        qh = qp.reshape(B, L, KV, G, Dh).transpose(0, 2, 3, 1, 4)
+        kh = kp.reshape(B, L, KV, Dh).transpose(0, 2, 1, 3)
+        qh = _cn(qh, ("batch", "kv_heads", "qgroups", "seq", None))
+    head_names = (("heads", None) if mode == "flat"
+                  else ("kv_heads", "qgroups"))
+    return chunked_plan_scan(
+        qh, kh, k_ratio=scfg.k_ratio, s_threshold=scfg.s_threshold,
+        window=scfg.window, f_threshold=scfg.f_threshold,
+        row_block=max(scfg.window, min(512, L)), causal=scfg.causal,
+        head_names=head_names)
+
+
+_SPLS_CHUNK_THRESHOLD = 8192
+
+
+def _capacities(cfg: ArchConfig, L: int) -> Tuple[Optional[int], Optional[int]]:
+    s = cfg.spls
+    qc = None if s.q_capacity_ratio >= 1.0 else max(
+        s.window, math.ceil(s.q_capacity_ratio * L))
+    kc = None if s.kv_capacity_ratio >= 1.0 else max(
+        s.window, math.ceil(s.kv_capacity_ratio * L))
+    return qc, kc
+
+
+def block_forward(cfg: ArchConfig, blk: BlockCfg, p: dict, x: jax.Array,
+                  cache_len: Optional[int] = None):
+    """Full-sequence block.  x: (B, L, D).
+
+    With ``cache_len`` (prefill) also returns the block's decode cache.
+    """
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    plan, cache = None, None
+    if blk.mixer == "attn":
+        from .attention import head_shard_mode
+        # padded head mode (no divisible factorization) runs dense: the
+        # SPLS plan layout would need garbage-head vote filtering -- noted
+        # in DESIGN.md §Arch-applicability.
+        if head_shard_mode(cfg) != "padded":
+            if cfg.spls.enabled and x.shape[1] >= _SPLS_CHUNK_THRESHOLD:
+                plan = build_block_plan_chunked(cfg, p, xn)
+            else:
+                plan = build_block_plan(cfg, p, xn)
+        qc, kc = _capacities(cfg, x.shape[1]) if plan is not None else (None, None)
+        h = attention_forward(cfg, p["attn"], xn, window=blk.window,
+                              plan=plan, q_capacity=qc, kv_capacity=kc,
+                              cache_len=cache_len)
+        if cache_len is not None:
+            h, cache = h
+    else:
+        h = mamba_forward(cfg, p["mamba"], xn, want_cache=cache_len is not None)
+        if cache_len is not None:
+            h, cache = h
+    if cfg.use_post_norm:
+        h = rms_norm(h, p["post_ln1"], cfg.norm_eps)
+    x = x + h
+
+    if blk.has_ffn:
+        xn2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        fn = lambda t: ffn_forward(cfg, blk.use_moe, p["ffn"], t)
+        if plan is not None and cfg.spls.ffn_sparsity:
+            qc, _ = _capacities(cfg, x.shape[1])
+            if qc is not None:
+                h2 = spls_ffn_packed(xn2, fn, plan, qc)
+            else:
+                h2 = spls_ffn(xn2, fn, plan)
+        else:
+            h2 = fn(xn2)
+        if cfg.use_post_norm:
+            h2 = rms_norm(h2, p["post_ln2"], cfg.norm_eps)
+        x = x + h2
+    if cache_len is not None:
+        return x, cache
+    return x
+
+
+def block_decode(cfg: ArchConfig, blk: BlockCfg, p: dict, x: jax.Array,
+                 cache, pos: jax.Array):
+    """One-token decode.  x: (B, 1, D); returns (x, new_cache)."""
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if blk.mixer == "attn":
+        h, cache = attention_decode(cfg, p["attn"], xn, cache, pos,
+                                    window=blk.window)
+    else:
+        h, cache = mamba_decode(cfg, p["mamba"], xn, cache)
+    if cfg.use_post_norm:
+        h = rms_norm(h, p["post_ln1"], cfg.norm_eps)
+    x = x + h
+    if blk.has_ffn:
+        xn2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        h2 = ffn_forward(cfg, blk.use_moe, p["ffn"], xn2)
+        if cfg.use_post_norm:
+            h2 = rms_norm(h2, p["post_ln2"], cfg.norm_eps)
+        x = x + h2
+    return x, cache

@@ -1,0 +1,198 @@
+"""Mamba2 (SSD -- state-space duality) mixer, chunked scan + decode step.
+
+Follows the minimal SSD formulation of Dao & Gu (arXiv:2405.21060): the
+selective state-space recurrence is computed chunk-wise as (i) an intra-chunk
+"attention-like" quadratic term and (ii) an inter-chunk recurrence over
+per-chunk final states, carried with ``lax.scan``.  B/C are shared across
+heads (ngroups = 1).  Decode keeps a constant-size recurrent state, which is
+what makes the ``long_500k`` cell trivially sub-quadratic for SSM archs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.logical import constrain
+from .common import dense_init, rms_norm
+
+__all__ = ["init_mamba", "mamba_forward", "mamba_decode", "MambaCache",
+           "init_mamba_cache", "ssd_chunked"]
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, conv_channels, W)   rolling conv window
+    ssd: jax.Array    # (B, H, P, N)            recurrent state
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> MambaCache:
+    di, n = cfg.d_inner, cfg.ssm_state
+    h, p = cfg.mamba_nheads, cfg.mamba_headdim
+    return MambaCache(
+        conv=jnp.zeros((batch, di + 2 * n, cfg.conv_width), dtype),
+        ssd=jnp.zeros((batch, h, p, n), jnp.float32))
+
+
+def init_mamba(cfg: ArchConfig, key: jax.Array, dtype) -> dict:
+    D, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.mamba_nheads
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], (D, proj_out), dtype, fan_in=D),
+        "conv_w": dense_init(ks[1], (di + 2 * n, cfg.conv_width), dtype,
+                             fan_in=cfg.conv_width),
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gate_norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, D), dtype, fan_in=di),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.mamba_nheads
+    z, xc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    return z, xc, dt  # xc = [x | B | C] -> conv channels
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Lower-triangular segment sums: out[..., i, j] = sum_{j < t <= i} x[t]."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                init_state: jax.Array | None = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  x: (b,l,h,p); dt: (b,l,h); A: (h,); B,C: (b,l,n).
+
+    Returns (y (b,l,h,p), final_state (b,h,p,n)).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, f"seq {l} not divisible by chunk {chunk}"
+    nc, cl = l // chunk, chunk
+
+    xdt = x * dt[..., None]
+    dA = (dt * A).reshape(b, nc, cl, h).transpose(0, 3, 1, 2)  # (b,h,nc,cl)
+    dA_cs = jnp.cumsum(dA, axis=-1)
+
+    xc = xdt.reshape(b, nc, cl, h, p)
+    Bc = B.reshape(b, nc, cl, n)
+    Cc = C.reshape(b, nc, cl, n)
+
+    # (i) intra-chunk quadratic term
+    Lmat = jnp.exp(_segsum(dA))                                # (b,h,nc,s,t)
+    y_diag = jnp.einsum("bcsn,bctn,bhcst,bcthp->bcshp", Cc, Bc, Lmat, xc)
+
+    # (ii) per-chunk final states + inter-chunk recurrence
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)           # (b,h,nc,cl)
+    states = jnp.einsum("bctn,bhct,bcthp->bchpn", Bc, decay_states, xc)
+    chunk_decay = jnp.exp(dA_cs[..., -1])                     # (b,h,nc)
+
+    s0 = (jnp.zeros((b, h, p, n), x.dtype) if init_state is None
+          else init_state.astype(x.dtype))
+
+    def step(carry, inp):
+        st, dec = inp                    # (b,h,p,n), (b,h)
+        prev = carry
+        new = prev * dec[..., None, None] + st
+        return new, prev                 # emit state *before* this chunk
+
+    xs = (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1))
+    final, prev_states = jax.lax.scan(step, s0, xs)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (b,nc,h,p,n)
+
+    state_decay_out = jnp.exp(dA_cs)                          # (b,h,nc,cl)
+    y_off = jnp.einsum("bcsn,bchpn,bhcs->bcshp", Cc, prev_states,
+                       state_decay_out)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def _conv1d_causal(xc: jax.Array, w: jax.Array, bias: jax.Array,
+                   state: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv.  xc: (B, L, Ch); w: (Ch, W)."""
+    W = w.shape[-1]
+    x = xc.swapaxes(-1, -2)  # (B, Ch, L)
+    if state is None:
+        x = jnp.pad(x, ((0, 0), (0, 0), (W - 1, 0)))
+    else:
+        x = jnp.concatenate([state[..., 1:], x], axis=-1)
+    out = sum(x[..., i:i + xc.shape[1]] * w[:, i][None, :, None]
+              for i in range(W))
+    return jax.nn.silu(out + bias[None, :, None]).swapaxes(-1, -2)
+
+
+def mamba_forward(cfg: ArchConfig, pr: dict, u: jax.Array,
+                  chunk: int = 256, want_cache: bool = False):
+    """Full-sequence Mamba2 mixer.  u: (B, L, D) -> (B, L, D).
+
+    With ``want_cache`` also returns the MambaCache for decoding.
+    """
+    B_, L, D = u.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.mamba_nheads, cfg.mamba_headdim
+    chunk = min(chunk, L)
+    if L % chunk:
+        chunk = 1  # fallback for ragged tiny sequences (smoke tests)
+    zxbcdt = jnp.einsum("bld,de->ble", u, pr["in_proj"])
+    z, xc, dt = _split_proj(cfg, zxbcdt)
+    conv_tail = None
+    if want_cache:
+        W = cfg.conv_width
+        tail = xc[:, -W:, :] if L >= W else jnp.pad(
+            xc, ((0, 0), (W - L, 0), (0, 0)))
+        conv_tail = jnp.swapaxes(tail, 1, 2)
+    xc = _conv1d_causal(xc, pr["conv_w"], pr["conv_b"])
+    x, Bm, Cm = jnp.split(xc, [di, di + n], axis=-1)
+    x = constrain(x, ("batch", "seq", "inner"))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + pr["dt_bias"])
+    A = -jnp.exp(pr["A_log"])
+    xh = x.reshape(B_, L, h, p)
+    y, final = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                           Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                           chunk)
+    y = y + pr["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, L, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), pr["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, pr["out_proj"])
+    out = constrain(out, ("batch", "seq", "embed"))
+    if want_cache:
+        return out, MambaCache(conv=conv_tail, ssd=final)
+    return out
+
+
+def mamba_decode(cfg: ArchConfig, pr: dict, u: jax.Array,
+                 cache: MambaCache) -> Tuple[jax.Array, MambaCache]:
+    """One-token recurrent step.  u: (B, 1, D)."""
+    B_, _, D = u.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.mamba_nheads, cfg.mamba_headdim
+    zxbcdt = jnp.einsum("bld,de->ble", u, pr["in_proj"])[:, 0]
+    z, xc, dt = _split_proj(cfg, zxbcdt)
+
+    conv = jnp.concatenate([cache.conv[..., 1:], xc[..., None]], axis=-1)
+    xc = jax.nn.silu((conv * pr["conv_w"][None]).sum(-1) + pr["conv_b"])
+    x, Bm, Cm = jnp.split(xc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + pr["dt_bias"])   # (B, h)
+    A = -jnp.exp(pr["A_log"])
+    dA = jnp.exp(dt * A)                                           # (B, h)
+    xh = x.reshape(B_, h, p).astype(jnp.float32)
+    dBx = (dt[..., None, None] * xh[..., None]
+           * Bm.astype(jnp.float32)[:, None, None, :])             # (B,h,p,n)
+    state = cache.ssd * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    y = y + pr["D"][None, :, None] * xh
+    y = y.reshape(B_, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), pr["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, pr["out_proj"])[:, None]
+    return out, MambaCache(conv=conv, ssd=state)

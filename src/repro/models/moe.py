@@ -1,0 +1,142 @@
+"""FFN layers: dense (gated) MLP and capacity-based Mixture-of-Experts.
+
+The MoE uses the einsum dispatch/combine formulation (Shazeer et al.): the
+expert axis binds to the "model" mesh axis, so with pjit the dispatch einsum
+lowers to an all-to-all-like collective schedule chosen by SPMD.  Capacity
+is static (``cfg.moe_capacity``), tokens over capacity are dropped (their
+FFN contribution is zero and the residual carries them) -- the same
+static-shape discipline the SPLS capacity mode uses.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.logical import constrain
+from .common import Activations, dense_init
+
+__all__ = ["init_mlp", "mlp_forward", "init_moe", "moe_forward", "init_ffn",
+           "ffn_forward"]
+
+
+# ---------------------------------------------------------------------------
+# Dense (gated) MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ArchConfig, key: jax.Array, dtype) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (D, F), dtype, fan_in=D),
+         "w_down": dense_init(ks[1], (F, D), dtype, fan_in=F)}
+    if Activations.gated(cfg.ffn_activation):
+        p["w_gate"] = dense_init(ks[2], (D, F), dtype, fan_in=D)
+    return p
+
+
+def mlp_forward(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    act = Activations.fn(cfg.ffn_activation)
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if "w_gate" in p:
+        up = up * act(jnp.einsum("...d,df->...f", x, p["w_gate"]))
+    else:
+        up = act(up)
+    # NOTE: leading dim keeps its batch sharding -- a None entry in a
+    # sharding constraint means *replicated*, not *unconstrained*.
+    up = constrain(up, ("batch",) + (None,) * (up.ndim - 2) + ("ffn",))
+    out = jnp.einsum("...f,fd->...d", up, p["w_down"])
+    return constrain(out, ("batch",) + (None,) * (out.ndim - 2) + ("embed",))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def init_moe(cfg: ArchConfig, key: jax.Array, dtype) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    ks = jax.random.split(key, 4)
+    p = {"router": dense_init(ks[0], (D, E), jnp.float32, fan_in=D),
+         "w_up": dense_init(ks[1], (E, D, F), dtype, fan_in=D),
+         "w_down": dense_init(ks[2], (E, F, D), dtype, fan_in=F)}
+    if Activations.gated(cfg.ffn_activation):
+        p["w_gate"] = dense_init(ks[3], (E, D, F), dtype, fan_in=D)
+    return p
+
+
+def _dispatch_combine(probs: jax.Array, topk: int, capacity: int):
+    """Top-k routing with per-expert capacity.
+
+    probs: (B, L, E) router probabilities.  Returns
+      dispatch: (B, L, E, C) one-hot-ish bool->dtype dispatch tensor
+      combine:  (B, L, E, C) gate-weighted combine tensor
+    """
+    B, L, E = probs.shape
+    gate_vals, experts = jax.lax.top_k(probs, topk)          # (B, L, K)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    onehot = jax.nn.one_hot(experts, E, dtype=jnp.int32)     # (B, L, K, E)
+    # slot-major priority: slot k of token l gets position after all slots
+    # k' < k of every token and all tokens l' < l at the same slot.
+    slot_major = onehot.transpose(0, 2, 1, 3).reshape(B, topk * L, E)
+    pos = jnp.cumsum(slot_major, axis=1) - slot_major        # positions before
+    pos = pos.reshape(B, topk, L, E).transpose(0, 2, 1, 3)   # (B, L, K, E)
+    within = (pos < capacity) & (onehot == 1)
+    pos_in_e = (pos * onehot).sum(-1)                        # (B, L, K)
+
+    cap_oh = jax.nn.one_hot(pos_in_e, capacity, dtype=probs.dtype)  # (B,L,K,C)
+    keep = within.astype(probs.dtype)                        # (B, L, K, E)
+    dispatch = jnp.einsum("blke,blkc->blec", keep, cap_oh)
+    combine = jnp.einsum("blke,blk,blkc->blec", keep, gate_vals, cap_oh)
+    return dispatch, combine
+
+
+def moe_forward(cfg: ArchConfig, p: dict, x: jax.Array,
+                capacity: Optional[int] = None) -> jax.Array:
+    """x: (B, L, D) -> (B, L, D) through top-k experts."""
+    B, L, D = x.shape
+    E = cfg.moe_experts
+    C = capacity or cfg.moe_capacity(L)
+    act = Activations.fn(cfg.ffn_activation)
+
+    logits = jnp.einsum("bld,de->ble", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    dispatch, combine = _dispatch_combine(probs, cfg.moe_topk, C)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+
+    xin = jnp.einsum("blec,bld->becd", dispatch, x)
+    xin = constrain(xin, ("batch", "experts", None, None))
+    up = jnp.einsum("becd,edf->becf", xin, p["w_up"])
+    if "w_gate" in p:
+        up = up * act(jnp.einsum("becd,edf->becf", xin, p["w_gate"]))
+    else:
+        up = act(up)
+    yout = jnp.einsum("becf,efd->becd", up, p["w_down"])
+    yout = constrain(yout, ("batch", "experts", None, None))
+    out = jnp.einsum("blec,becd->bld", combine, yout)
+    return constrain(out, ("batch", "seq", "embed"))
+
+
+def moe_aux_loss(probs: jax.Array, dispatch: jax.Array) -> jax.Array:
+    """Load-balance auxiliary loss (Switch-style)."""
+    # fraction of tokens dispatched to each expert vs mean router prob
+    fe = dispatch.sum(-1).mean(axis=(0, 1))        # (E,)
+    pe = probs.mean(axis=(0, 1))                   # (E,)
+    return probs.shape[-1] * jnp.sum(fe * pe)
+
+
+# ---------------------------------------------------------------------------
+# Unified FFN entry
+# ---------------------------------------------------------------------------
+
+def init_ffn(cfg: ArchConfig, use_moe: bool, key: jax.Array, dtype) -> dict:
+    return init_moe(cfg, key, dtype) if use_moe else init_mlp(cfg, key, dtype)
+
+
+def ffn_forward(cfg: ArchConfig, use_moe: bool, p: dict,
+                x: jax.Array) -> jax.Array:
+    return moe_forward(cfg, p, x) if use_moe else mlp_forward(cfg, p, x)

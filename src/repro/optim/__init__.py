@@ -1,0 +1,7 @@
+"""Optimizers + schedules + distributed-optimization tricks (pure JAX)."""
+
+from .adamw import (AdamWConfig, OptState, adamw_init, adamw_update,
+                    clip_by_global_norm, global_norm)
+from .schedules import constant, warmup_cosine
+from .grad_compress import (CompressionState, compress, compress_init,
+                            compressed_mean, decompress)

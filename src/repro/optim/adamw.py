@@ -1,0 +1,93 @@
+"""AdamW in pure JAX (no optax): functional init/update with global-norm
+clipping, decoupled weight decay, and dtype-configurable moments.
+
+Moments inherit each parameter's sharding automatically (tree_map of
+elementwise ops), so the optimizer adds no collectives beyond the gradient
+all-reduce that pjit already inserts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: Optional[str] = None  # None -> match param dtype
+
+
+class OptState(NamedTuple):
+    count: jax.Array
+    mu: Any
+    nu: Any
+
+
+def _moment_dtype(cfg: AdamWConfig, p: jax.Array):
+    if cfg.moment_dtype is None:
+        return p.dtype
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.moment_dtype]
+
+
+def adamw_init(cfg: AdamWConfig, params: Any) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, _moment_dtype(cfg, p))
+    return OptState(count=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(zeros, params),
+                    nu=jax.tree.map(zeros, params))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), norm
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, state: OptState, params: Any,
+                 lr: jax.Array) -> Tuple[Any, OptState, dict]:
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    count = state.count + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * cfg.b1 + g32 * (1 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + jnp.square(g32) * (1 - cfg.b2)
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step
+        return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    # three passes so pytree tuples in params (period blocks) stay pytrees;
+    # XLA CSEs the shared moment math across them.
+    new_params = jax.tree.map(lambda g, m, v, p: upd(g, m, v, p)[0],
+                              grads, state.mu, state.nu, params)
+    new_mu = jax.tree.map(lambda g, m, v, p: upd(g, m, v, p)[1],
+                          grads, state.mu, state.nu, params)
+    new_nu = jax.tree.map(lambda g, m, v, p: upd(g, m, v, p)[2],
+                          grads, state.mu, state.nu, params)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(count, new_mu, new_nu), metrics

@@ -1,0 +1,5 @@
+"""Analytic performance + energy models of the ESACT accelerator."""
+
+from .cycles import ESACTConfig, speedup_breakdown, stage_cycles
+from .energy import (BASELINES, ESACT_AREA_POWER, attention_level_comparison,
+                     energy_efficiency)

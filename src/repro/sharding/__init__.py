@@ -1,0 +1,3 @@
+"""Sharding: logical-axis rules + mesh-aware partition specs."""
+
+from .logical import axis_rules, constrain, logical_to_mesh, named_sharding, spec_for

@@ -1,0 +1,119 @@
+"""Logical-axis sharding: flax-style named axes decoupled from the mesh.
+
+Model code annotates tensors with *logical* axis names ("batch", "embed",
+"heads", ...).  The launcher installs a rule set mapping logical names to
+mesh axes ("data", "model", "pod") for the current mesh; outside a mesh (or
+with no rules installed) every annotation is a no-op, so the same model code
+runs on a laptop CPU and on a 512-chip two-pod mesh unchanged.
+
+Rules are divisibility-aware: a logical axis only binds to a mesh axis if the
+dimension is divisible by the mesh-axis size, otherwise it silently degrades
+to replicated -- this is what lets e.g. ``kv_heads=8`` coexist with a 16-way
+model axis (the KV projections replicate, Q heads shard).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["axis_rules", "constrain", "logical_to_mesh", "spec_for",
+           "current_rules", "named_sharding"]
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, MeshAxes]]:
+    return getattr(_state, "rules", None)
+
+
+def _current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, MeshAxes], mesh: Optional[Mesh] = None):
+    """Install logical->mesh axis rules (and optionally the mesh itself)."""
+    prev_rules = getattr(_state, "rules", None)
+    prev_mesh = getattr(_state, "mesh", None)
+    _state.rules = dict(rules)
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.rules = prev_rules
+        _state.mesh = prev_mesh
+
+
+def _axis_size(mesh: Optional[Mesh], axes: MeshAxes) -> int:
+    if mesh is None or axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+    return size
+
+
+def logical_to_mesh(names: Sequence[Optional[str]],
+                    shape: Optional[Sequence[int]] = None,
+                    rules: Optional[Dict[str, MeshAxes]] = None,
+                    mesh: Optional[Mesh] = None) -> P:
+    """Map logical axis names to a PartitionSpec under the active rules.
+
+    ``shape`` (if given) enables the divisibility check: axes whose dim is
+    not divisible by the bound mesh-axis size degrade to replicated.
+    Duplicate mesh axes (two logical axes binding the same mesh axis) keep
+    only the first binding.
+    """
+    rules = rules if rules is not None else current_rules()
+    mesh = mesh if mesh is not None else _current_mesh()
+    if rules is None:
+        return P(*([None] * len(names)))
+    used = set()
+    out = []
+    for i, n in enumerate(names):
+        ax = rules.get(n) if n is not None else None
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        if any(a in used for a in axes):
+            out.append(None)
+            continue
+        if shape is not None:
+            sz = _axis_size(mesh, axes)
+            if sz > 1 and shape[i] % sz != 0:
+                out.append(None)
+                continue
+        used.update(axes)
+        out.append(ax if isinstance(ax, str) else tuple(axes))
+    return P(*out)
+
+
+def spec_for(names: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+    return logical_to_mesh(names, shape)
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without rules/mesh."""
+    rules = current_rules()
+    mesh = _current_mesh()
+    if rules is None or mesh is None:
+        return x
+    spec = logical_to_mesh(names, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, names: Sequence[Optional[str]],
+                   shape: Optional[Sequence[int]] = None,
+                   rules: Optional[Dict[str, MeshAxes]] = None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_mesh(names, shape, rules, mesh))

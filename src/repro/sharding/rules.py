@@ -1,0 +1,195 @@
+"""Mesh-aware sharding rules for parameters, optimizer state, activations,
+KV caches and input batches.
+
+Parallelism layout (DESIGN.md):
+  * ``data`` (x ``pod``)  -- pure data parallelism over the batch; gradients
+    all-reduce over it.  The pod axis is just an outer data axis, so the
+    multi-pod dry-run exercises cross-pod (DCI) gradient reduction.
+  * ``model``             -- Megatron-style tensor parallelism: attention
+    heads / FFN hidden / MoE experts / mamba inner channels / vocab.
+
+Every binding is divisibility-guarded: a dimension that does not divide by
+the mesh-axis size silently replicates (e.g. kv_heads=8 on a 16-way model
+axis, or vocab=50280 on mamba2).  For *decode* shapes with tiny batches the
+batch cannot shard, so the KV-cache sequence axis takes over the mesh axes
+(flash-decode style sequence parallelism).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from .logical import logical_to_mesh
+
+__all__ = ["activation_rules", "param_sharding", "cache_sharding",
+           "batch_sharding", "opt_state_sharding", "DATA_AXES"]
+
+
+def DATA_AXES(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def activation_rules(mesh: Mesh) -> Dict[str, Any]:
+    """Logical -> mesh rules installed around model code."""
+    return {
+        "batch": DATA_AXES(mesh),
+        "seq": None,
+        # residual-stream activations saved at layer boundaries (the remat
+        # checkpoints) are sequence-sharded over the model axis -- Megatron
+        # sequence parallelism; cuts saved-activation memory by |model|.
+        "act_seq": "model",
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "qgroups": "model",  # shards when kv_heads cannot (GQA, kv < |model|)
+        "ffn": "model",
+        "experts": "model",
+        "vocab": "model",
+        "inner": "model",
+    }
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings (path-pattern based)
+# ---------------------------------------------------------------------------
+
+def _param_logical(path_str: str, ndim: int, fsdp: bool):
+    """Logical axes for one parameter leaf, by trailing name + rank.
+
+    With ``fsdp`` every large weight also binds one non-TP dimension to the
+    "fsdp" logical axis (the in-pod data axis): params + moments shard
+    ZeRO-3 style and XLA all-gathers them at use, per scanned layer.
+    """
+    name = path_str.split("/")[-1]
+    F = "fsdp" if fsdp else None
+    table = {
+        "embed": ("vocab", F),
+        "lm_head": (F, "vocab"),
+        "wq": (F, "kv_heads", "qgroups", None),
+        "wk": (F, "kv_heads", None),
+        "wv": (F, "kv_heads", None),
+        "wo": ("kv_heads", "qgroups", None, F),
+        "w_up": ("experts", F, "ffn") if ndim >= 4 else (F, "ffn"),
+        "w_gate": ("experts", F, "ffn") if ndim >= 4 else (F, "ffn"),
+        "w_down": ("experts", "ffn", F) if ndim >= 4 else ("ffn", F),
+        "router": (None, None),
+        "in_proj": (F, "inner"),
+        "out_proj": ("inner", F),
+        "conv_w": ("inner", None),
+        "conv_b": ("inner",),
+        "gate_norm": ("inner",),
+    }
+    names = table.get(name)
+    if names is None:
+        return (None,) * ndim  # norms, A_log, D, dt_bias, ... replicate
+    # left-pad with None for the stacked period axis (and any extras)
+    pad = ndim - len(names)
+    return (None,) * pad + tuple(names)
+
+
+def param_sharding(cfg: ArchConfig, mesh: Mesh, abstract_params: Any) -> Any:
+    """NamedSharding pytree matching ``abstract_params``."""
+    rules = activation_rules(mesh)
+    rules["fsdp"] = "data"  # ZeRO shards stay inside a pod (no DCI gathers)
+    rules["act_seq"] = "model"
+
+    def assign(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        names = _param_logical(pstr, leaf.ndim, cfg.fsdp)
+        spec = logical_to_mesh(names, leaf.shape, rules, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_params)
+
+
+def opt_state_sharding(param_shardings: Any, opt_state_abstract: Any) -> Any:
+    """Moments share their parameter's sharding; count replicates."""
+    from repro.optim.adamw import OptState
+    mesh = jax.tree.leaves(param_shardings)[0].mesh
+    return OptState(
+        count=NamedSharding(mesh, P()),
+        mu=param_shardings,
+        nu=param_shardings)
+
+
+# ---------------------------------------------------------------------------
+# batch + cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_sharding(mesh: Mesh, global_batch: int) -> NamedSharding:
+    """Batch axis over (pod, data) when divisible, else replicated."""
+    axes = DATA_AXES(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    if global_batch % n == 0:
+        return NamedSharding(mesh, P(axes))
+    return NamedSharding(mesh, P())
+
+
+def _shard_batch_or_seq(mesh: Mesh, batch: int, seq: int, head_div: bool,
+                        batch_pos: int, head_pos: int, seq_pos: int,
+                        ndim: int) -> P:
+    """Decode-cache layout: prefer batch over data; spill seq when needed."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_axes = DATA_AXES(mesh)
+    n_data = 1
+    for a in data_axes:
+        n_data *= sizes[a]
+    spec: list = [None] * ndim
+    seq_axes = []
+    if batch % n_data == 0 and batch >= n_data:
+        spec[batch_pos] = data_axes if len(data_axes) > 1 else data_axes[0]
+    else:
+        seq_axes.extend(data_axes)  # tiny batch: give data axes to seq
+    if head_div:
+        spec[head_pos] = "model"
+    else:
+        seq_axes.append("model")
+    if seq_axes:
+        n_seq = 1
+        for a in seq_axes:
+            n_seq *= sizes[a]
+        if seq % n_seq == 0:
+            spec[seq_pos] = tuple(seq_axes) if len(seq_axes) > 1 else seq_axes[0]
+    return P(*spec)
+
+
+def cache_sharding(cfg: ArchConfig, mesh: Mesh, abstract_cache: Any,
+                   batch: int, max_len: int) -> Any:
+    """Shardings for the stacked decode cache pytree.
+
+    KV tensors: (periods, B, KV, S, Dh); mamba conv: (periods, B, Ch, W);
+    mamba ssd state: (periods, B, H, Pd, N).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_model = sizes.get("model", 1)
+
+    def assign(leaf):
+        if leaf.ndim == 5 and leaf.shape[3] == max_len:      # KV cache
+            kv_div = cfg.n_kv_heads % n_model == 0 and cfg.n_kv_heads >= n_model
+            spec = _shard_batch_or_seq(mesh, batch, max_len, kv_div,
+                                       batch_pos=1, head_pos=2, seq_pos=3,
+                                       ndim=5)
+        elif leaf.ndim == 4 and leaf.shape[2] == cfg.d_inner + 2 * cfg.ssm_state:
+            # conv state: shard channels over model when divisible
+            ch = leaf.shape[2]
+            spec = P(None, None,
+                     "model" if ch % n_model == 0 else None, None)
+        elif leaf.ndim == 5:                                  # ssd state
+            h = leaf.shape[2]
+            spec = P(None, None,
+                     "model" if h % n_model == 0 else None, None, None)
+        else:
+            spec = P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(assign, abstract_cache)

@@ -1,0 +1,150 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step on
+CPU, asserting output shapes and no NaNs (assignment requirement f)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LM_SHAPES
+from repro.configs.registry import ARCH_IDS, all_cells, get_config, get_shape
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          loss_fn, prefill)
+
+jax.config.update("jax_platform_name", "cpu")
+
+ALL_ARCHS = ARCH_IDS + ["bert-base-esact"]
+
+
+def _smoke_cfg(arch_id):
+    cfg = get_config(arch_id).smoke()
+    # keep CPU smoke fast + fp32 numerics
+    return dataclasses.replace(cfg, remat=False)
+
+
+def _batch(cfg, B=2, L=16, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 2)
+    if cfg.input_mode == "tokens":
+        inputs = jax.random.randint(ks[0], (B, L), 0, cfg.vocab_size)
+    else:
+        inputs = jax.random.normal(ks[0], (B, L, cfg.d_model))
+    labels = jax.random.randint(ks[1], (B, L), 0, cfg.vocab_size)
+    return {"inputs": inputs, "labels": labels}
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_finite(self, arch_id):
+        cfg = _smoke_cfg(arch_id)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        batch = _batch(cfg)
+        logits = jax.jit(lambda p, x: forward(cfg, p, x))(params,
+                                                          batch["inputs"])
+        assert logits.shape == (2, 16, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all()), "NaN/Inf in logits"
+
+    def test_train_step(self, arch_id):
+        cfg = _smoke_cfg(arch_id)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        batch = _batch(cfg)
+
+        def step(p):
+            loss, metrics = loss_fn(cfg, p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.jit(
+            jax.value_and_grad(step, has_aux=True))(params)
+        assert np.isfinite(float(loss))
+        for leaf in jax.tree.leaves(grads):
+            assert bool(jnp.isfinite(leaf).all()), "non-finite gradient"
+
+    def test_decode_step(self, arch_id):
+        cfg = _smoke_cfg(arch_id)
+        if not cfg.causal:
+            pytest.skip("encoder arch has no decode step")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        batch = _batch(cfg)
+        _, cache = jax.jit(
+            lambda p, x: prefill(cfg, p, x, max_len=24))(params,
+                                                         batch["inputs"])
+        if cfg.input_mode == "tokens":
+            tok = jnp.zeros((2, 1), jnp.int32)
+        else:
+            tok = jnp.zeros((2, 1, cfg.d_model))
+        pos = jnp.full((2,), 16, jnp.int32)
+        logits, new_cache = jax.jit(
+            lambda p, c, t: decode_step(cfg, p, c, t, pos))(params, cache, tok)
+        assert logits.shape == (2, 1, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all())
+
+
+class TestAssignment:
+    """The full configs must match the assignment table exactly."""
+
+    TABLE = {
+        # name: (L, d_model, H, KV, d_ff, vocab)
+        "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+        "h2o-danube3-4b": (24, 3840, 32, 8, 10240, 32000),
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+    }
+
+    @pytest.mark.parametrize("arch_id", list(TABLE))
+    def test_exact_dims(self, arch_id):
+        cfg = get_config(arch_id)
+        L, D, H, KV, F, V = self.TABLE[arch_id]
+        assert cfg.n_layers == L and cfg.d_model == D
+        assert cfg.n_heads == H and cfg.n_kv_heads == KV
+        assert cfg.d_ff == F and cfg.vocab_size == V
+
+    @pytest.mark.parametrize("arch_id,lo,hi", [
+        ("gemma2-27b", 26e9, 29e9), ("h2o-danube3-4b", 3.5e9, 4.5e9),
+        ("qwen3-0.6b", 0.55e9, 0.8e9), ("llama3-405b", 395e9, 415e9),
+        ("dbrx-132b", 125e9, 140e9), ("olmoe-1b-7b", 6.5e9, 7.5e9),
+        ("musicgen-medium", 1.2e9, 1.6e9), ("mamba2-370m", 0.33e9, 0.42e9),
+        ("jamba-v0.1-52b", 49e9, 55e9), ("pixtral-12b", 11.5e9, 13e9),
+    ])
+    def test_param_counts_match_published(self, arch_id, lo, hi):
+        assert lo <= get_config(arch_id).param_count() <= hi
+
+    def test_moe_active_params(self):
+        olmoe = get_config("olmoe-1b-7b")
+        assert 1.0e9 <= olmoe.active_param_count() <= 1.5e9  # "1b-7b"
+        dbrx = get_config("dbrx-132b")
+        assert 34e9 <= dbrx.active_param_count() <= 40e9     # "36B active"
+
+    def test_cell_count(self):
+        runnable = list(all_cells())
+        everything = list(all_cells(include_skipped=True))
+        assert len(everything) == 40
+        assert len(runnable) == 34  # 6 long_500k skips on full-attn archs
+
+    def test_long500k_only_on_subquadratic(self):
+        for arch_id in ARCH_IDS:
+            cfg = get_config(arch_id)
+            sub_quadratic = (cfg.has_mamba
+                             or any(b.window for b in cfg.period))
+            assert (("long_500k" in cfg.supported_shapes) == sub_quadratic), \
+                arch_id
+
+    def test_moe_capacity_rounding(self):
+        cfg = get_config("olmoe-1b-7b")
+        c = cfg.moe_capacity(4096)
+        assert c % 8 == 0 and c >= 4096 * 8 // 64
+
+    @pytest.mark.parametrize("shape", [s.name for s in LM_SHAPES])
+    def test_shapes_table(self, shape):
+        s = get_shape(shape)
+        table = {"train_4k": (4096, 256, "train"),
+                 "prefill_32k": (32768, 32, "prefill"),
+                 "decode_32k": (32768, 128, "decode"),
+                 "long_500k": (524288, 1, "decode")}
+        assert (s.seq_len, s.global_batch, s.kind) == table[shape]

@@ -1,0 +1,128 @@
+"""Unit + property tests for the SPLS quantizers (repro.core.quantizers)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quantizers import (apot_levels, apot_project,
+                                   hlog_bitlevel_decode, hlog_bitlevel_encode,
+                                   hlog_bitlevel_project, hlog_levels,
+                                   hlog_project, pot_levels, pot_project,
+                                   project_to_levels, quantize_dequantize,
+                                   symmetric_quantize)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestLevels:
+    def test_hlog_levels_eq1(self):
+        # eq (1): {2^0, 2^1, 2^0+2^1, 2^2, ..., 2^{n-2}, 2^{n-3}+2^{n-2}, 2^{n-1}}
+        np.testing.assert_array_equal(
+            hlog_levels(8),
+            [1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128])
+
+    def test_hlog_levels_are_pot_union_midpoints(self):
+        lv = set(hlog_levels(8).tolist())
+        pot = {2.0 ** m for m in range(8)}
+        mids = {1.5 * 2.0 ** m for m in range(1, 7)}
+        assert lv == pot | mids
+
+    def test_pot_levels(self):
+        np.testing.assert_array_equal(pot_levels(4), [1, 2, 4, 8])
+
+    def test_apot_denser_than_hlog(self):
+        assert len(apot_levels(8)) > len(hlog_levels(8))
+        # APoT contains every HLog level except pure singles already in it
+        assert set(hlog_levels(8)) <= set(apot_levels(8)) | {1.0}
+
+
+class TestProjection:
+    def test_zero_maps_to_zero(self):
+        for proj in (hlog_project, pot_project, apot_project):
+            assert float(proj(jnp.zeros(3))[0]) == 0.0
+
+    def test_tie_projects_up(self):
+        # 40 is equidistant from 32 and 48 -> paper: project to higher level
+        assert float(project_to_levels(jnp.asarray([40.0]), hlog_levels(8))[0]) == 48.0
+        # 1.25*2^m boundary: 10 is equidistant from 8 and 12
+        assert float(project_to_levels(jnp.asarray([10.0]), hlog_levels(8))[0]) == 12.0
+
+    def test_sign_preserved(self):
+        v = jnp.asarray([-42.0, 42.0])
+        out = hlog_project(v)
+        assert float(out[0]) == -float(out[1])
+
+    def test_levels_are_fixed_points(self):
+        lv = jnp.asarray(hlog_levels(8), jnp.float32)
+        np.testing.assert_array_equal(hlog_project(lv), lv)
+
+    @given(st.integers(min_value=-127, max_value=127))
+    @settings(max_examples=64, deadline=None)
+    def test_hlog_relative_error_bound(self, v):
+        # HLog grid spacing is <= 1/3 of the magnitude -> rel error <= 1/5
+        if v == 0:
+            return
+        out = float(hlog_project(jnp.asarray([float(v)]))[0])
+        assert abs(out - v) / abs(v) <= 0.2 + 1e-6
+
+
+class TestBitLevel:
+    def test_bitlevel_matches_projection_exhaustive(self):
+        """The SD unit (Fig. 12) is bit-exact vs. nearest-level projection."""
+        v = jnp.arange(-127, 128).astype(jnp.float32)
+        np.testing.assert_array_equal(hlog_bitlevel_project(v), hlog_project(v))
+
+    def test_paper_example_fig12(self):
+        # (00101010)_2 = 42 -> code (exp=5, form=1) -> 1.5 * 32 = 48
+        code = hlog_bitlevel_encode(jnp.asarray([42]))
+        assert int((code[0] >> 1) & 7) == 5 and int(code[0] & 1) == 1
+        assert float(hlog_bitlevel_decode(code)[0]) == 48.0
+        # (11101110)_2 = -18 two's complement -> paper codes (4, 0) -> -16
+        code = hlog_bitlevel_encode(jnp.asarray([-18]))
+        assert int((code[0] >> 1) & 7) == 4 and int(code[0] & 1) == 0
+        assert float(hlog_bitlevel_decode(code)[0]) == -16.0
+
+    def test_zero_roundtrip(self):
+        assert float(hlog_bitlevel_project(jnp.asarray([0.0]))[0]) == 0.0
+
+    def test_code_width_is_5_bits_plus_zero_flag(self):
+        v = jnp.arange(-127, 128).astype(jnp.float32)
+        codes = hlog_bitlevel_encode(v)
+        nz = codes[v != 0]
+        assert int(jnp.max(nz)) < (1 << 5)
+
+
+class TestQuantizeDequantize:
+    @pytest.mark.parametrize("method", ["hlog", "hlog_bitlevel", "pot", "apot", "none"])
+    def test_scale_invariance(self, method):
+        x = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
+        a = quantize_dequantize(x, method)
+        b = quantize_dequantize(x * 7.5, method)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a) * 7.5, rtol=1e-5)
+
+    def test_error_ordering_hlog_between_pot_and_apot(self):
+        """Fig. 7: PoT worst, APoT best, HLog close to APoT."""
+        x = jax.random.normal(jax.random.PRNGKey(1), (4096,))
+        err = {m: float(jnp.mean(jnp.abs(quantize_dequantize(x, m) - x)))
+               for m in ("pot", "hlog", "apot")}
+        assert err["apot"] <= err["hlog"] <= err["pot"]
+
+    def test_symmetric_quantize_integer_grid(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (128,))
+        q, scale = symmetric_quantize(x)
+        np.testing.assert_allclose(np.asarray(q), np.round(np.asarray(q)))
+        assert float(jnp.max(jnp.abs(q))) <= 127
+
+    @given(st.lists(st.floats(min_value=-100, max_value=100,
+                              allow_nan=False), min_size=1, max_size=64))
+    @settings(max_examples=32, deadline=None)
+    def test_hlog_idempotent(self, xs):
+        """Projecting an already-projected tensor is a no-op (same scale)."""
+        x = jnp.asarray(xs, jnp.float32)
+        q, scale = symmetric_quantize(x)
+        once = hlog_project(q)
+        twice = hlog_project(once)
+        np.testing.assert_allclose(np.asarray(twice), np.asarray(once))

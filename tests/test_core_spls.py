@@ -1,0 +1,266 @@
+"""Tests for the SPLS pipeline: top-k, local similarity, MFI, plan, exec."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (SPLSConfig, build_plan, dense_flops, gather_rows,
+                        kv_keep_from_mask, local_similarity, mfi_ffn_sparsity,
+                        pack_by_mask, plan_stats, predicted_attention,
+                        reduction_report, row_topk_mask, sparsify_pam,
+                        spls_attention, spls_attention_packed, spls_ffn,
+                        spls_ffn_packed, spls_flops, topk_count,
+                        unpack_by_leader, windowed_l1)
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, k=0, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(k), shape) * scale
+
+
+class TestTopK:
+    def test_exact_k_per_row(self):
+        x = _rand((3, 4, 16, 16), 1)
+        mask = row_topk_mask(x, 5)
+        np.testing.assert_array_equal(np.asarray(mask.sum(-1)), 5)
+
+    def test_keeps_largest(self):
+        x = jnp.asarray([[1.0, 5.0, 3.0, -2.0]])
+        mask = row_topk_mask(x, 2)
+        np.testing.assert_array_equal(np.asarray(mask[0]), [False, True, True, False])
+
+    def test_k_geq_L_keeps_all(self):
+        x = _rand((2, 8), 2)
+        assert bool(row_topk_mask(x, 8).all())
+        assert bool(row_topk_mask(x, 100).all())
+
+    def test_topk_count(self):
+        assert topk_count(128, 0.12) == 16  # ceil(15.36)
+        assert topk_count(128, 0.0) == 1
+        assert topk_count(128, 2.0) == 128
+
+    def test_spa_zeroes_dropped(self):
+        pam = _rand((1, 2, 32, 32), 3)
+        spa, mask = sparsify_pam(pam, 0.25)
+        assert float(jnp.abs(jnp.where(mask, 0.0, spa)).max()) == 0.0
+        np.testing.assert_allclose(np.asarray(spa[mask]), np.asarray(pam[mask]))
+
+    def test_kv_keep_column_semantics(self):
+        mask = jnp.zeros((1, 1, 4, 6), bool).at[0, 0, :, 2].set(True)
+        keep = kv_keep_from_mask(mask)
+        np.testing.assert_array_equal(
+            np.asarray(keep[0, 0]), [False, False, True, False, False, False])
+
+
+class TestLocalSimilarity:
+    def test_identical_rows_cluster(self):
+        row = _rand((1, 16), 4)
+        spa = jnp.tile(row, (8, 1))[None]  # one window of 8 identical rows
+        sim = local_similarity(spa, w=8, s=0.1)
+        assert int(sim.is_critical.sum()) == 1
+        np.testing.assert_array_equal(np.asarray(sim.leader[0]), 0)
+
+    def test_orthogonal_rows_all_critical(self):
+        spa = jnp.eye(8)[None]  # disjoint supports -> L1 distance maximal
+        sim = local_similarity(spa, w=8, s=0.5)
+        assert bool(sim.is_critical.all())
+        np.testing.assert_array_equal(np.asarray(sim.leader[0]), np.arange(8))
+
+    def test_leader_precedes_follower_within_window(self):
+        spa = _rand((2, 3, 64, 64), 5)
+        sim = local_similarity(spa, w=8, s=0.9)
+        lead = np.asarray(sim.leader)
+        rows = np.broadcast_to(np.arange(64), lead.shape)
+        assert (lead <= rows).all()
+        assert (lead // 8 == rows // 8).all()  # same window
+
+    def test_critical_iff_self_leader(self):
+        spa = _rand((1, 2, 40, 40), 6)
+        sim = local_similarity(spa, w=8, s=0.7)
+        rows = np.broadcast_to(np.arange(40), sim.leader.shape)
+        np.testing.assert_array_equal(np.asarray(sim.is_critical),
+                                      np.asarray(sim.leader) == rows)
+
+    def test_leaders_are_critical(self):
+        spa = _rand((1, 4, 64, 64), 7)
+        sim = local_similarity(spa, w=8, s=0.95)
+        crit = np.asarray(sim.is_critical)
+        lead = np.asarray(sim.leader)
+        assert np.take_along_axis(crit, lead, axis=-1).all()
+
+    def test_s_monotone_sparsity(self):
+        spa, _ = sparsify_pam(_rand((2, 4, 128, 128), 8), 0.2)
+        frac = []
+        for s in (0.1, 0.5, 0.9):
+            sim = local_similarity(spa, w=8, s=s)
+            frac.append(float(sim.is_critical.mean()))
+        assert frac[0] >= frac[1] >= frac[2]
+
+    def test_window_partition_ragged_tail(self):
+        spa = _rand((1, 1, 13, 13), 9)  # L=13, w=8 -> windows [8, 5]
+        sim = local_similarity(spa, w=8, s=0.9, valid_len=13)
+        assert sim.leader.shape == (1, 1, 13)
+        assert int(sim.leader.max()) <= 12
+
+    def test_windowed_l1_symmetric_zero_diag(self):
+        d = windowed_l1(_rand((2, 2, 32, 32), 10), 8)
+        np.testing.assert_allclose(np.asarray(d), np.asarray(d.swapaxes(-1, -2)),
+                                   atol=1e-6)
+        assert float(jnp.abs(jnp.diagonal(d, axis1=-2, axis2=-1)).max()) < 1e-6
+        assert float(d.min()) >= 0 and float(d.max()) <= 1.0 + 1e-6
+
+
+class TestMFI:
+    def test_unanimous_heads_make_similar(self):
+        # 4 heads, 8 tokens, every head says token t follows token 0
+        leader = jnp.zeros((4, 8), jnp.int32)[None]
+        out = mfi_ffn_sparsity(leader, w=8, f_threshold=4)
+        np.testing.assert_array_equal(np.asarray(out.leader[0]), 0)
+        assert int(out.is_critical.sum()) == 1
+
+    def test_threshold_blocks_vote(self):
+        # 2-of-4 heads vote token1 -> 0; f=3 rejects, f=2 accepts
+        leader = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (1, 4, 8))
+        leader = leader.at[0, :2, 1].set(0)
+        rej = mfi_ffn_sparsity(leader, w=8, f_threshold=3)
+        assert bool(rej.is_critical[0, 1])
+        acc = mfi_ffn_sparsity(leader, w=8, f_threshold=2)
+        assert not bool(acc.is_critical[0, 1])
+        assert int(acc.leader[0, 1]) == 0
+
+    def test_f_monotone_sparsity(self):
+        spa, _ = sparsify_pam(_rand((2, 8, 64, 64), 11), 0.15)
+        sim = local_similarity(spa, w=8, s=0.8)
+        dens = [float(mfi_ffn_sparsity(sim.leader, 8, f).is_critical.mean())
+                for f in (2, 4, 8)]
+        assert dens[0] <= dens[1] <= dens[2]
+
+    def test_ffn_leaders_are_ffn_critical(self):
+        spa, _ = sparsify_pam(_rand((1, 8, 64, 64), 12), 0.15)
+        sim = local_similarity(spa, w=8, s=0.9)
+        out = mfi_ffn_sparsity(sim.leader, 8, 3)
+        crit = np.asarray(out.is_critical)
+        lead = np.asarray(out.leader)
+        assert np.take_along_axis(crit, lead, axis=-1).all()
+
+
+class TestPlan:
+    def _plan(self, B=2, L=64, D=64, H=4, **kw):
+        cfg = SPLSConfig(**kw)
+        x = _rand((B, L, D), 13)
+        wq = _rand((D, D), 14, 0.1)
+        wk = _rand((D, D), 15, 0.1)
+        return build_plan(x, wq, wk, H, cfg), cfg
+
+    def test_disabled_is_dense(self):
+        plan, _ = self._plan(enabled=False, causal=False)
+        assert bool(plan.attn_mask.all())
+        assert bool(plan.q_critical.all()) and bool(plan.ffn_critical.all())
+
+    def test_causal_never_selects_future(self):
+        plan, _ = self._plan(causal=True)
+        iu = np.triu_indices(64, k=1)
+        assert not np.asarray(plan.attn_mask)[..., iu[0], iu[1]].any()
+
+    def test_stats_in_unit_interval(self):
+        plan, _ = self._plan(k_ratio=0.2, s_threshold=0.7, f_threshold=2)
+        for k, v in plan_stats(plan).items():
+            assert 0.0 <= float(v) <= 1.0, k
+
+    def test_flops_reduction_positive_under_sparsity(self):
+        plan, _ = self._plan(k_ratio=0.12, s_threshold=0.9, f_threshold=2)
+        rep = reduction_report(plan, 64, 256)
+        assert float(rep["attention_reduction"]) > 0.5
+        assert float(rep["qkv_reduction"]) > 0.0
+        assert float(rep["ffn_reduction"]) >= 0.0
+
+    def test_dense_plan_flops_match_formula(self):
+        plan, _ = self._plan(enabled=False, causal=False)
+        got = spls_flops(plan, 64, 256, include_overhead=False)
+        want = dense_flops(2, 64, 64, 4, 256, causal=False)
+        np.testing.assert_allclose(float(got.qkv), float(want.qkv))
+        np.testing.assert_allclose(float(got.attention), float(want.attention))
+        np.testing.assert_allclose(float(got.ffn), float(want.ffn))
+
+
+class TestSparseExec:
+    def _setup(self, B=2, H=4, L=64, Dh=16, s=0.8, k_ratio=0.15):
+        D = H * Dh
+        x = _rand((B, L, D), 20)
+        plan, _ = TestPlan()._plan(B=B, L=L, D=D, H=H,
+                                   k_ratio=k_ratio, s_threshold=s,
+                                   f_threshold=2)
+        q = _rand((B, H, L, Dh), 21)
+        k = _rand((B, H, L, Dh), 22)
+        v = _rand((B, H, L, Dh), 23)
+        return x, plan, q, k, v
+
+    def test_packed_equals_simulation_at_full_capacity(self):
+        x, plan, q, k, v = self._setup()
+        o_sim = spls_attention(q, k, v, plan)
+        o_pack = spls_attention_packed(q, k, v, plan, 64, 64)
+        np.testing.assert_allclose(np.asarray(o_sim), np.asarray(o_pack),
+                                   atol=1e-5)
+
+    def test_similar_rows_copy_leader_output(self):
+        x, plan, q, k, v = self._setup()
+        out = np.asarray(spls_attention(q, k, v, plan))
+        lead = np.asarray(plan.q_leader)
+        for b in range(2):
+            for h in range(4):
+                np.testing.assert_allclose(out[b, h], out[b, h][lead[b, h]])
+
+    def test_ffn_packed_equals_simulation(self):
+        x, plan, q, k, v = self._setup()
+        w = _rand((64, 64), 24, 0.1)
+        fn = lambda t: jax.nn.gelu(t @ w)
+        np.testing.assert_allclose(
+            np.asarray(spls_ffn(x, fn, plan)),
+            np.asarray(spls_ffn_packed(x, fn, plan, 64)), atol=1e-5)
+
+    def test_reduced_capacity_runs_and_matches_on_critical(self):
+        x, plan, q, k, v = self._setup(s=0.95, k_ratio=0.1)
+        ncrit = int(plan.q_critical.sum(-1).max())
+        nkv = int(plan.kv_keep.sum(-1).max())
+        o_sim = np.asarray(spls_attention(q, k, v, plan))
+        o_pack = np.asarray(spls_attention_packed(q, k, v, plan, ncrit, nkv))
+        crit = np.asarray(plan.q_critical)
+        np.testing.assert_allclose(o_pack[crit], o_sim[crit], atol=1e-5)
+
+    def test_pack_unpack_roundtrip_identity_mask(self):
+        mask = jnp.ones((3, 16), bool)
+        perm, slot = pack_by_mask(mask, 16)
+        x = _rand((3, 16, 8), 25)
+        leader = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32), (3, 16))
+        y = unpack_by_leader(gather_rows(x, perm), slot, leader)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x))
+
+    @given(st.integers(1, 6), st.integers(8, 33))
+    @settings(max_examples=16, deadline=None)
+    def test_pack_slots_consistent(self, seed, L):
+        mask = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5, (L,))
+        perm, slot = pack_by_mask(mask[None], L)
+        perm, slot = np.asarray(perm[0]), np.asarray(slot[0])
+        # every critical row's slot points back at itself through perm
+        for row in range(L):
+            if mask[row]:
+                assert perm[slot[row]] == row
+
+    def test_grad_flows_through_simulation_mode(self):
+        x, plan, q, k, v = self._setup()
+        f = lambda q_: spls_attention(q_, k, v, plan).sum()
+        g = jax.grad(f)(q)
+        assert np.isfinite(np.asarray(g)).all()
+        # non-critical rows get no gradient (their Q is never used)...
+        # unless they lead someone; critical rows always used by themselves.
+        used = np.zeros(np.asarray(plan.q_leader).shape, bool)
+        lead = np.asarray(plan.q_leader)
+        np.put_along_axis(used, lead, True, axis=-1)
+        gn = np.abs(np.asarray(g)).sum(-1)
+        assert (gn[~used] == 0).all()

@@ -1,0 +1,169 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
+pure-jnp oracles in repro.kernels.ref (assignment requirement c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quantizers import hlog_project, symmetric_quantize
+from repro.kernels import (flash_attention, hlog_qmatmul,
+                           local_similarity_dist)
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _randn(shape, seed=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape).astype(dtype)
+
+
+def _randint8(shape, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape) * 35
+    return jnp.round(x).clip(-127, 127)
+
+
+class TestHlogQMatmul:
+    @pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 128, 384),
+                                       (128, 256, 128), (512, 512, 256)])
+    def test_shapes_exact(self, M, K, N):
+        xq, wq = _randint8((M, K), 1), _randint8((K, N), 2)
+        out = hlog_qmatmul(xq, wq, interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.hlog_qmatmul_ref(xq, wq)),
+                                   rtol=1e-6)
+
+    @pytest.mark.parametrize("bm,bn,bk", [(128, 128, 128), (256, 128, 256)])
+    def test_block_shapes(self, bm, bn, bk):
+        xq, wq = _randint8((256, 256), 3), _randint8((256, 256), 4)
+        out = hlog_qmatmul(xq, wq, bm=bm, bn=bn, bk=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.hlog_qmatmul_ref(xq, wq)),
+                                   rtol=1e-6)
+
+    def test_inkernel_projection_matches_bitlevel(self):
+        """In-kernel float projection == SD-unit projection on the int8 grid."""
+        from repro.kernels.hlog_qmatmul import _hlog_project_inkernel
+        v = jnp.arange(-127, 128).astype(jnp.float32)
+        np.testing.assert_array_equal(np.asarray(_hlog_project_inkernel(v)),
+                                      np.asarray(hlog_project(v)))
+
+    def test_full_prediction_path(self):
+        """Kernel applied to real activations after int8 pre-quantization."""
+        x = _randn((128, 128), 5)
+        w = _randn((128, 128), 6) * 0.1
+        xq, sx = symmetric_quantize(x)
+        wq, sw = symmetric_quantize(w)
+        out = hlog_qmatmul(xq, wq, interpret=True) * sx * sw
+        want = (hlog_project(xq) * sx) @ (hlog_project(wq) * sw)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("L,Dh", [(128, 64), (256, 64), (256, 128),
+                                      (384, 64)])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_shapes(self, L, Dh, causal):
+        q, k, v = (_randn((2, 2, L, Dh), s) for s in (1, 2, 3))
+        out = flash_attention(q, k, v, causal=causal, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        q, k, v = (_randn((1, 2, 256, 64), s, dtype) for s in (4, 5, 6))
+        out = flash_attention(q, k, v, interpret=True)
+        want = ref.flash_attention_ref(q, k, v)
+        atol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32), atol=atol)
+
+    @pytest.mark.parametrize("window", [64, 128, 1024])
+    def test_sliding_window(self, window):
+        q, k, v = (_randn((1, 2, 512, 64), s) for s in (7, 8, 9))
+        out = flash_attention(q, k, v, window=window, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5)
+
+    def test_softcap(self):
+        q, k, v = (_randn((1, 2, 256, 64), s) for s in (10, 11, 12))
+        out = flash_attention(q, k, v, softcap=50.0, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, softcap=50.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5)
+
+    @pytest.mark.parametrize("keep_rate", [0.3, 0.7, 1.0])
+    def test_spls_kv_keep_mask(self, keep_rate):
+        """The paper's column-pruning mask (zero SPA columns)."""
+        q, k, v = (_randn((2, 2, 256, 64), s) for s in (13, 14, 15))
+        keep = jax.random.bernoulli(jax.random.PRNGKey(16), keep_rate,
+                                    (2, 2, 256))
+        keep = keep.at[:, :, 0].set(True)  # row 0 must see something
+        out = flash_attention(q, k, v, kv_keep=keep, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, kv_keep=keep)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5)
+
+    def test_block_shape_sweep(self):
+        q, k, v = (_randn((1, 1, 512, 64), s) for s in (17, 18, 19))
+        want = ref.flash_attention_ref(q, k, v)
+        for bq, bk in [(128, 128), (256, 128), (128, 256), (512, 512)]:
+            out = flash_attention(q, k, v, block_q=bq, block_k=bk,
+                                  interpret=True)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                       atol=2e-5, err_msg=f"bq={bq} bk={bk}")
+
+    def test_fully_masked_rows_zero(self):
+        """If SPLS kills every column a row could see, output must be 0."""
+        q, k, v = (_randn((1, 1, 128, 64), s) for s in (20, 21, 22))
+        keep = jnp.zeros((1, 1, 128), bool)
+        out = flash_attention(q, k, v, causal=False, kv_keep=keep,
+                              interpret=True)
+        np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+class TestLocalSimilarityKernel:
+    @pytest.mark.parametrize("L,Lk,w", [(64, 128, 8), (64, 256, 8),
+                                        (128, 128, 4), (96, 384, 8)])
+    def test_shapes(self, L, Lk, w):
+        spa = _randn((2, 2, L, Lk), 23)
+        out = local_similarity_dist(spa, w=w, bk=128, interpret=True)
+        want = ref.local_similarity_ref(spa, w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_chunked_equals_unchunked(self):
+        spa = _randn((1, 2, 64, 512), 24)
+        a = local_similarity_dist(spa, w=8, bk=512, interpret=True)
+        b = local_similarity_dist(spa, w=8, bk=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+    @given(st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_property_symmetry_and_diag(self, seed):
+        spa = _randn((1, 1, 16, 128), seed)
+        d = np.asarray(local_similarity_dist(spa, w=8, bk=128,
+                                             interpret=True))
+        np.testing.assert_allclose(d, np.swapaxes(d, -1, -2), rtol=1e-5,
+                                   atol=1e-4)
+        assert np.abs(np.diagonal(d, axis1=-2, axis2=-1)).max() < 1e-4
+
+
+class TestOpsFallback:
+    def test_untileable_shapes_fall_back(self):
+        q, k, v = (_randn((1, 1, 100, 64), s) for s in (25, 26, 27))
+        out = ops.attention(q, k, v)  # 100 % 128 != 0 -> ref path
+        want = ref.flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=1e-6)
+
+    def test_predict_matmul_untileable(self):
+        xq, wq = _randint8((100, 64), 28), _randint8((64, 100), 29)
+        np.testing.assert_allclose(
+            np.asarray(ops.predict_matmul(xq, wq)),
+            np.asarray(ref.hlog_qmatmul_ref(xq, wq)), rtol=1e-6)
