@@ -1,5 +1,6 @@
 """Kernel microbenchmarks: Pallas (interpret on CPU; compiled on TPU) vs
-the pure-jnp oracle, plus max-abs-error per shape."""
+the pure-jnp oracle, plus max-abs-error per shape; and the attention
+backend registry timed dense-vs-pallas-vs-sparse on one workload."""
 
 from __future__ import annotations
 
@@ -11,6 +12,56 @@ from repro.kernels import (flash_attention, flash_decode, hlog_qmatmul,
                            local_similarity_dist)
 from repro.kernels import ref
 from .common import time_call
+
+
+def _backend_rows():
+    """Registry comparison: every forward backend on the same workload,
+    dense and under an SPLS plan (timings vs the xla_dense baseline; the
+    Pallas rows run in interpret mode on CPU -- numbers are for parity,
+    the speed story needs a TPU)."""
+    from repro.configs.base import ArchConfig, BlockCfg
+    from repro.core.spls import SPLSConfig, SparsityPlan, build_plan
+    from repro.models import available_backends, get_backend
+
+    B, H, L, Dh = 1, 4, 256, 64
+    D = H * Dh
+    cfg = ArchConfig(name="bench", d_model=D, n_heads=H, n_kv_heads=H,
+                     head_dim=Dh, causal=True)
+    ks = jax.random.split(jax.random.PRNGKey(9), 6)
+    q = jax.random.normal(ks[0], (B, H, 1, L, Dh))
+    k = jax.random.normal(ks[1], (B, H, L, Dh))
+    v = jax.random.normal(ks[2], (B, H, L, Dh))
+    plan = build_plan(jax.random.normal(ks[3], (B, L, D)),
+                      jax.random.normal(ks[4], (D, D)) * 0.1,
+                      jax.random.normal(ks[5], (D, D)) * 0.1,
+                      H, SPLSConfig(k_ratio=0.12, s_threshold=0.8,
+                                    window=8))
+    plan = SparsityPlan(*(t.reshape(B, H, 1, *t.shape[2:])
+                          if t.ndim > 2 else t for t in plan))
+
+    rows = []
+    interp = jax.default_backend() != "tpu"
+    names = sorted(available_backends(decode=False),
+                   key=lambda n: n != "xla_dense")  # baseline first
+    for with_plan in (False, True):
+        pl_ = plan if with_plan else None
+        base = None
+        for name in names:
+            fn = get_backend(name)
+            call = jax.jit(lambda q_, k_, v_, fn=fn: fn(
+                cfg, q_, k_, v_, plan=pl_, q_capacity=L // 2 if pl_ else None))
+            us = time_call(call, q, k, v)
+            out = call(q, k, v)
+            if base is None:
+                base = out
+            tag = "spls" if with_plan else "dense"
+            rows.append((f"kernel/attn_backend/{name}/{tag}/L{L}", us,
+                         {"max_err_vs_xla_dense":
+                          round(float(jnp.max(jnp.abs(out - base))), 6),
+                          "timing": ("interpret (CPU)"
+                                     if interp and "pallas" in name
+                                     else "jit")}))
+    return rows
 
 
 def run():
@@ -60,4 +111,6 @@ def run():
         local_similarity_dist(spa, w=8, interpret=True) - ref_fn(spa))))
     rows.append(("kernel/local_similarity/64x512", us_ref,
                  {"max_err_vs_oracle": round(err, 6)}))
+
+    rows.extend(_backend_rows())
     return rows

@@ -98,6 +98,11 @@ class ArchConfig:
     fsdp: bool = False
     # SPLS (the paper's technique); None-like default = disabled
     spls: SPLSConfig = SPLSConfig(enabled=False)
+    # attention execution backend (repro.models.attn_backend registry):
+    # "auto" | "xla_dense" | "xla_packed" | "xla_chunked" | "pallas_flash"
+    # | decode: "xla_dense_decode" | "pallas_flash_decode".  "auto" picks by
+    # platform, sequence length, and sparsity mode (models/README.md).
+    attn_backend: str = "auto"
     # training
     remat: bool = True
     # shape support: names from LM_SHAPES this arch can run; long_500k only

@@ -153,7 +153,8 @@ def spls_attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
                            scale: Optional[float] = None,
                            softcap: Optional[float] = None,
                            kv_chunk: int = 2048,
-                           causal: bool = True) -> jax.Array:
+                           causal: bool = True,
+                           window: Optional[int] = None) -> jax.Array:
     """Long-sequence capacity-mode sparse attention (ChunkedPlan).
 
     q: (B, KV', G', L, Dh); k/v: (B, KV', L, Dh) (un-repeated).  Packs
@@ -166,7 +167,6 @@ def spls_attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
     B, KVp, Gp, L, Dh = q.shape
     scale = scale if scale is not None else Dh ** -0.5
     Cq, Ck = min(q_capacity, L), min(kv_capacity, L)
-    assert Ck % kv_chunk == 0 or Ck < kv_chunk, (Ck, kv_chunk)
     kv_chunk = min(kv_chunk, Ck)
 
     q_perm, q_slot = pack_by_mask(plan.q_critical, Cq)
@@ -178,6 +178,14 @@ def spls_attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
     kp = gather_rows(kr, kv_perm)                               # (B,K,G,Ck,D)
     vp = gather_rows(vr, kv_perm)
     kv_alive = jnp.take_along_axis(plan.kv_keep, kv_perm, axis=-1)
+
+    pad = (-Ck) % kv_chunk
+    if pad:  # ragged capacity: dead padded columns keep the chunk grid even
+        kp = jnp.pad(kp, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+        vp = jnp.pad(vp, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+        kv_perm = jnp.pad(kv_perm, ((0, 0),) * 3 + ((0, pad),))
+        kv_alive = jnp.pad(kv_alive, ((0, 0),) * 3 + ((0, pad),))
+        Ck += pad
 
     nC = Ck // kv_chunk
     kc = kp.reshape(B, KVp, Gp, nC, kv_chunk, Dh).transpose(3, 0, 1, 2, 4, 5)
@@ -195,6 +203,13 @@ def spls_attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
         mask = al_c[..., None, :]
         if causal:
             mask = mask & (id_c[..., None, :] <= q_perm[..., :, None])
+        if window is not None:
+            # packed positions carry original ids, so the sliding window is
+            # an index-based band (symmetric when not causal)
+            mask = mask & (q_perm[..., :, None] - id_c[..., None, :] < window)
+            if not causal:
+                mask = mask & (id_c[..., None, :] - q_perm[..., :, None]
+                               < window)
         s = jnp.where(mask, s, -1e30)
         m_new = jnp.maximum(m_run, s.max(-1))
         corr = jnp.exp(m_run - m_new)

@@ -40,6 +40,8 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     m = (j <= i) if causal else jnp.ones((L, Lk), bool)
     if window is not None:
         m = m & (i - j < window)
+        if not causal:  # symmetric window, matching the model's band mask
+            m = m & (j - i < window)
     if kv_keep is not None:
         m = m & kv_keep[:, :, None, :]
     s = jnp.where(m, s, -jnp.inf)

@@ -41,8 +41,10 @@ _SKIP_OPS = {"bitcast", "tuple", "get-tuple-element", "parameter",
 
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
 # name = <shape (possibly a tuple with layouts)> <op>(%operand...
+# The operand lookahead admits tuple-shaped operands "((s32[], ...)" too --
+# jit'd while loops carry their carry as one tuple operand.
 _INSTR = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((?=%|\)|s32|f32|bf16|pred|u32)")
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((?=%|\)|\(|s32|f32|bf16|pred|u32)")
 _SHAPE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
 _WHILE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
 _TRIPS = re.compile(r'known_trip_count.{0,8}?"n"\s*:\s*"?(\d+)')

@@ -9,9 +9,22 @@ import and only then builds the mesh.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # AxisType landed in jax 0.5; the pinned 0.4.x has no explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - version-dependent
+    AxisType = None
 
 __all__ = ["make_production_mesh", "make_cpu_mesh", "mesh_axis_sizes"]
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    """jax.make_mesh with explicit Auto axis types where supported."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -23,14 +36,12 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_cpu_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Tiny mesh over however many (host) devices exist -- tests."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def mesh_axis_sizes(mesh: Mesh) -> dict:

@@ -7,6 +7,7 @@ constraints bind to the active mesh.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Callable, Dict, Optional
 
@@ -20,6 +21,13 @@ from repro.sharding.logical import constrain
 
 __all__ = ["make_train_step", "make_prefill_step", "make_serve_step",
            "make_loss_grad"]
+
+
+def _with_backend(cfg: ArchConfig, attn_backend: Optional[str]) -> ArchConfig:
+    """Pin an attention backend for this step (None keeps cfg's choice)."""
+    if attn_backend is None or attn_backend == cfg.attn_backend:
+        return cfg
+    return dataclasses.replace(cfg, attn_backend=attn_backend)
 
 
 def make_loss_grad(cfg: ArchConfig, n_micro: int = 1) -> Callable:
@@ -76,8 +84,14 @@ def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
     return train_step
 
 
-def make_prefill_step(cfg: ArchConfig) -> Callable:
-    """(params, inputs) -> (logits, cache).  SPLS runs here when enabled."""
+def make_prefill_step(cfg: ArchConfig,
+                      attn_backend: Optional[str] = None) -> Callable:
+    """(params, inputs) -> (logits, cache).  SPLS runs here when enabled.
+
+    ``attn_backend`` pins an attention backend for the whole prefill
+    (e.g. ``"pallas_flash"`` on TPU); default defers to ``cfg``/auto.
+    """
+    cfg = _with_backend(cfg, attn_backend)
 
     def prefill_step(params, inputs):
         return prefill(cfg, params, inputs)
@@ -85,8 +99,13 @@ def make_prefill_step(cfg: ArchConfig) -> Callable:
     return prefill_step
 
 
-def make_serve_step(cfg: ArchConfig) -> Callable:
-    """(params, cache, tokens, pos) -> (logits, new_cache)."""
+def make_serve_step(cfg: ArchConfig,
+                    attn_backend: Optional[str] = None) -> Callable:
+    """(params, cache, tokens, pos) -> (logits, new_cache).
+
+    ``attn_backend`` pins the decode backend (e.g. ``"pallas_flash_decode"``).
+    """
+    cfg = _with_backend(cfg, attn_backend)
 
     def serve_step(params, cache, tokens, pos):
         return decode_step(cfg, params, cache, tokens, pos)

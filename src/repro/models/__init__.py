@@ -1,6 +1,8 @@
 """Composable model definitions (pure JAX, functional parameters)."""
 
 from .common import apply_rope, layer_norm, rms_norm, rope_freqs, softcap
+from .attn_backend import (available_backends, get_backend, register_backend,
+                           resolve_backend)
 from .attention import (KVCache, attention_decode, attention_forward,
                         init_attention, init_kv_cache)
 from .moe import (ffn_forward, init_ffn, init_mlp, init_moe, mlp_forward,

@@ -16,9 +16,15 @@ time :func:`head_shard_mode` picks how heads bind to the mesh's model axis:
     over the model axis; TP still comes from FFN + vocab.  Noted in
     DESIGN.md.
 
-Long sequences use a KV-chunked online-softmax scan (the flash-attention
-recurrence in XLA) so scores never materialize at O(L^2); on real TPU the
-Pallas kernel in ``repro.kernels.flash_attention`` replaces it 1:1.
+Execution strategy is delegated to the **attention backend registry**
+(:mod:`repro.models.attn_backend`; selection rules documented in
+``src/repro/models/README.md``): ``cfg.attn_backend`` (default ``"auto"``)
+or an explicit ``backend=`` argument picks between the materialized-scores
+path (``xla_dense``), capacity-packed SPLS (``xla_packed``), the KV-chunked
+online-softmax scan (``xla_chunked``), and the Pallas flash kernels
+(``pallas_flash`` / ``pallas_flash_decode`` -- compiled on TPU, interpret
+mode elsewhere), with the SPLS :class:`SparsityPlan` lowered to block-level
+K/V skipping + packed critical Q rows on the Pallas path.
 """
 
 from __future__ import annotations
@@ -30,16 +36,12 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.spls import SparsityPlan
-from repro.core.sparse_exec import spls_attention, spls_attention_packed
 from repro.sharding.logical import constrain
-from .common import apply_rope, dense_init, rms_norm, rope_freqs, softcap
+from .attn_backend import get_backend, resolve_backend
+from .common import apply_rope, dense_init, rms_norm, rope_freqs
 
 __all__ = ["init_attention", "attention_forward", "attention_decode",
            "KVCache", "init_kv_cache", "head_shard_mode"]
-
-# KV-chunked attention kicks in above this length (keeps scores << O(L^2))
-_CHUNK_THRESHOLD = 8192
-_KV_CHUNK = 2048
 
 
 class KVCache(NamedTuple):
@@ -166,79 +168,18 @@ def _out_proj(cfg: ArchConfig, p: dict, o: jax.Array, mode: str) -> jax.Array:
     return constrain(out, ("batch", "seq", "embed"))
 
 
-def _band_mask(L: int, window: Optional[int], causal: bool) -> jax.Array:
-    i = jnp.arange(L)[:, None]
-    j = jnp.arange(L)[None, :]
-    m = (j <= i) if causal else jnp.ones((L, L), bool)
-    if window is not None:
-        m = m & (i - j < window) & (j - i < (1 if causal else window))
-    return m
-
-
-def _dense_scores_attention(cfg, q, k, v, window, L):
-    """Materialized-scores path for short L (cheap, single softmax)."""
-    s = jnp.einsum("bkgqd,bkld->bkgql", q, k) * (q.shape[-1] ** -0.5)
-    s = softcap(s, cfg.attn_softcap)
-    m = _band_mask(L, window, cfg.causal)
-    s = jnp.where(m, s, jnp.asarray(-1e30, s.dtype))
-    a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
-    return jnp.einsum("bkgql,bkld->bkgqd", a, v)
-
-
-def _chunked_attention(cfg, q, k, v, window, L):
-    """KV-chunked online-softmax (flash recurrence in XLA).
-
-    Scans KV chunks; running (max, denom, acc) carry.  Memory is
-    O(L * chunk) per head instead of O(L^2).  The Pallas kernel performs
-    the true block skip on TPU; under lax.scan all chunks are computed.
-    """
-    B, KVp, Gp, Lq, Dh = q.shape
-    C = _KV_CHUNK
-    nC = L // C
-    scale = Dh ** -0.5
-    qi = jnp.arange(Lq)
-
-    def body(carry, ck):
-        m_run, l_run, acc = carry
-        k_c, v_c, c0 = ck
-        s = jnp.einsum("bkgqd,bkld->bkgql", q, k_c).astype(jnp.float32) * scale
-        s = softcap(s, cfg.attn_softcap)
-        kj = c0 + jnp.arange(C)
-        mask = jnp.ones((Lq, C), bool)
-        if cfg.causal:
-            mask &= kj[None, :] <= qi[:, None]
-        if window is not None:
-            mask &= qi[:, None] - kj[None, :] < window
-        s = jnp.where(mask, s, -1e30)
-        m_new = jnp.maximum(m_run, s.max(-1))
-        corr = jnp.exp(m_run - m_new)
-        p = jnp.exp(s - m_new[..., None]) * mask.astype(jnp.float32)
-        l_new = l_run * corr + p.sum(-1)
-        acc = acc * corr[..., None] + jnp.einsum(
-            "bkgql,bkld->bkgqd", p.astype(v_c.dtype), v_c).astype(jnp.float32)
-        return (m_new, l_new, acc), None
-
-    kc = k.reshape(B, KVp, nC, C, Dh).transpose(2, 0, 1, 3, 4)
-    vc = v.reshape(B, KVp, nC, C, Dh).transpose(2, 0, 1, 3, 4)
-    offs = jnp.arange(nC) * C
-    init = (jnp.full((B, KVp, Gp, Lq), -1e30, jnp.float32),
-            jnp.zeros((B, KVp, Gp, Lq), jnp.float32),
-            jnp.zeros((B, KVp, Gp, Lq, Dh), jnp.float32))
-    (m_f, l_f, acc), _ = jax.lax.scan(body, init, (kc, vc, offs))
-    out = acc / jnp.maximum(l_f, 1e-9)[..., None]
-    return out.astype(q.dtype)
-
-
 def attention_forward(cfg: ArchConfig, p: dict, x: jax.Array,
                       window: Optional[int] = None,
                       plan: Optional[SparsityPlan] = None,
                       q_capacity: Optional[int] = None,
                       kv_capacity: Optional[int] = None,
-                      cache_len: Optional[int] = None):
+                      cache_len: Optional[int] = None,
+                      backend: Optional[str] = None):
     """Full-sequence attention.  x: (B, L, D) -> (B, L, D).
 
     With ``cache_len`` set, also returns a right-padded KVCache (prefill);
-    the cache always stores the compact (B, KV, S, Dh) layout.
+    the cache always stores the compact (B, KV, S, Dh) layout.  ``backend``
+    overrides ``cfg.attn_backend`` (see :mod:`repro.models.attn_backend`).
     """
     B, L, D = x.shape
     KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
@@ -246,32 +187,11 @@ def attention_forward(cfg: ArchConfig, p: dict, x: jax.Array,
     mode = head_shard_mode(cfg)
     positions = jnp.broadcast_to(jnp.arange(L), (B, L))
     q, k, v = _project_qkv(cfg, p, x, positions, mode)
-    KVp, Gp = q.shape[1], q.shape[2]
 
-    if plan is not None:
-        from repro.core.spls_chunked import ChunkedPlan
-        from repro.core.sparse_exec import spls_attention_chunked
-        if isinstance(plan, ChunkedPlan):
-            # long-sequence progressive path: packed + chunked, no O(L^2)
-            o = spls_attention_chunked(
-                q, k, v, plan, q_capacity or L, kv_capacity or L,
-                Dh ** -0.5, cfg.attn_softcap, causal=cfg.causal)
-        else:
-            # SPLS path (simulation / capacity semantics); plan tensors
-            # share the (KV', G') layout produced by build_block_plan.
-            kr = jnp.broadcast_to(k[:, :, None], (B, KVp, Gp, L, Dh))
-            vr = jnp.broadcast_to(v[:, :, None], (B, KVp, Gp, L, Dh))
-            if q_capacity is not None and q_capacity < L:
-                o = spls_attention_packed(q, kr, vr, plan, q_capacity,
-                                          kv_capacity or L, Dh ** -0.5,
-                                          cfg.attn_softcap)
-            else:
-                o = spls_attention(q, kr, vr, plan, Dh ** -0.5,
-                                   cfg.attn_softcap)
-    elif L > _CHUNK_THRESHOLD and L % _KV_CHUNK == 0:
-        o = _chunked_attention(cfg, q, k, v, window, L)
-    else:
-        o = _dense_scores_attention(cfg, q, k, v, window, L)
+    name = resolve_backend(backend or cfg.attn_backend, cfg, L=L, plan=plan,
+                           q_capacity=q_capacity)
+    o = get_backend(name)(cfg, q, k, v, window=window, plan=plan,
+                          q_capacity=q_capacity, kv_capacity=kv_capacity)
 
     out = _out_proj(cfg, p, o, mode)
     if cache_len is not None:
@@ -283,13 +203,16 @@ def attention_forward(cfg: ArchConfig, p: dict, x: jax.Array,
 
 
 def attention_decode(cfg: ArchConfig, p: dict, x: jax.Array, cache: KVCache,
-                     pos: jax.Array, window: Optional[int] = None):
+                     pos: jax.Array, window: Optional[int] = None,
+                     backend: Optional[str] = None):
     """One-token decode.  x: (B, 1, D); pos: (B,) current write index.
 
     Returns (out (B, 1, D), new_cache).  The cache is pre-allocated at
     max_len; masking handles both not-yet-written and out-of-window slots.
     Decode keeps the structured layout: the cache stays (B, KV, S, Dh) and
     scores shard over whatever the cache sharding chose (kv heads or seq).
+    Dispatches through the decode side of the backend registry
+    (``xla_dense_decode`` / ``pallas_flash_decode``).
     """
     B, _, D = x.shape
     KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
@@ -302,15 +225,9 @@ def attention_decode(cfg: ArchConfig, p: dict, x: jax.Array, cache: KVCache,
     k_all = upd(cache.k, k_new, pos)
     v_all = upd(cache.v, v_new, pos)
 
-    S = k_all.shape[2]
-    s = jnp.einsum("bkgqd,bkld->bkgql", q, k_all) * (Dh ** -0.5)
-    s = softcap(s, cfg.attn_softcap)
-    j = jnp.arange(S)[None, :]
-    m = j <= pos[:, None]
-    if window is not None:
-        m = m & (pos[:, None] - j < window)
-    s = jnp.where(m[:, None, None, None, :], s, jnp.asarray(-1e30, s.dtype))
-    a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
-    o = jnp.einsum("bkgql,bkld->bkgqd", a, v_all)
-    out = _out_proj(cfg, p, o, "structured")
+    name = resolve_backend(backend or cfg.attn_backend, cfg,
+                           L=k_all.shape[2], decode=True)
+    o = get_backend(name)(cfg, q[:, :, :, 0], k_all, v_all, pos=pos,
+                          window=window)
+    out = _out_proj(cfg, p, o[:, :, :, None], "structured")
     return out, KVCache(k=k_all, v=v_all)

@@ -181,10 +181,13 @@ def _capacities(cfg: ArchConfig, L: int) -> Tuple[Optional[int], Optional[int]]:
 
 
 def block_forward(cfg: ArchConfig, blk: BlockCfg, p: dict, x: jax.Array,
-                  cache_len: Optional[int] = None):
+                  cache_len: Optional[int] = None,
+                  attn_backend: Optional[str] = None):
     """Full-sequence block.  x: (B, L, D).
 
     With ``cache_len`` (prefill) also returns the block's decode cache.
+    ``attn_backend`` overrides ``cfg.attn_backend`` for the mixer (see
+    :mod:`repro.models.attn_backend`).
     """
     xn = rms_norm(x, p["ln1"], cfg.norm_eps)
     plan, cache = None, None
@@ -201,7 +204,7 @@ def block_forward(cfg: ArchConfig, blk: BlockCfg, p: dict, x: jax.Array,
         qc, kc = _capacities(cfg, x.shape[1]) if plan is not None else (None, None)
         h = attention_forward(cfg, p["attn"], xn, window=blk.window,
                               plan=plan, q_capacity=qc, kv_capacity=kc,
-                              cache_len=cache_len)
+                              cache_len=cache_len, backend=attn_backend)
         if cache_len is not None:
             h, cache = h
     else:
@@ -232,12 +235,12 @@ def block_forward(cfg: ArchConfig, blk: BlockCfg, p: dict, x: jax.Array,
 
 
 def block_decode(cfg: ArchConfig, blk: BlockCfg, p: dict, x: jax.Array,
-                 cache, pos: jax.Array):
+                 cache, pos: jax.Array, attn_backend: Optional[str] = None):
     """One-token decode.  x: (B, 1, D); returns (x, new_cache)."""
     xn = rms_norm(x, p["ln1"], cfg.norm_eps)
     if blk.mixer == "attn":
         h, cache = attention_decode(cfg, p["attn"], xn, cache, pos,
-                                    window=blk.window)
+                                    window=blk.window, backend=attn_backend)
     else:
         h, cache = mamba_decode(cfg, p["mamba"], xn, cache)
     if cfg.use_post_norm:

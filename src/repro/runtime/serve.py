@@ -40,11 +40,17 @@ class ServeConfig:
     n_slots: int = 4
     max_len: int = 256
     greedy: bool = True
+    # attention backend override for this engine (None = cfg/auto); see
+    # repro.models.attn_backend -- prefill resolves the forward side
+    # (e.g. "pallas_flash"), ticks resolve the decode side.
+    attn_backend: Optional[str] = None
 
 
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig):
         assert cfg.input_mode == "tokens", "engine serves token models"
+        if scfg.attn_backend is not None:
+            cfg = dataclasses.replace(cfg, attn_backend=scfg.attn_backend)
         self.cfg, self.params, self.scfg = cfg, params, scfg
         self.queue: deque = deque()
         self.slots: List[Optional[Request]] = [None] * scfg.n_slots

@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings
+from _propcheck import strategies as st
 
 from repro.core.quantizers import (apot_levels, apot_project,
                                    hlog_bitlevel_decode, hlog_bitlevel_encode,

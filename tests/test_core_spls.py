@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings
+from _propcheck import strategies as st
 
 from repro.core import (SPLSConfig, build_plan, dense_flops, gather_rows,
                         kv_keep_from_mask, local_similarity, mfi_ffn_sparsity,

@@ -5,8 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings
+from _propcheck import strategies as st
 
 from repro.core.quantizers import hlog_project, symmetric_quantize
 from repro.kernels import (flash_attention, hlog_qmatmul,
@@ -124,6 +124,115 @@ class TestFlashAttention:
         keep = jnp.zeros((1, 1, 128), bool)
         out = flash_attention(q, k, v, causal=False, kv_keep=keep,
                               interpret=True)
+        np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+class TestFlashAttentionBoundaries:
+    """Exhaustive small-shape audit of the block-skip `live` predicates:
+    window edges, causal block boundaries, ragged L (padding path), packed
+    q_pos rows, and all-pruned kv_keep blocks -- every case vs the dense
+    oracle."""
+
+    @pytest.mark.parametrize("L", [16, 24, 40])
+    @pytest.mark.parametrize("window", [1, 4, 8, 13, None])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_window_and_causal_edges(self, L, window, causal):
+        q, k, v = (_randn((1, 2, L, 8), s) for s in (30, 31, 32))
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=8, block_k=8, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5,
+                                   err_msg=f"L={L} w={window} c={causal}")
+
+    @pytest.mark.parametrize("bq,bk", [(8, 8), (16, 8), (8, 16), (16, 16)])
+    def test_ragged_padding(self, bq, bk):
+        """L % block != 0 pads internally; padded K dies via keep mask."""
+        L = 36
+        q, k, v = (_randn((1, 1, L, 8), s) for s in (33, 34, 35))
+        out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5)
+
+    @pytest.mark.parametrize("dead", [(0, 8), (8, 16), (24, 32), (8, 32)])
+    def test_dead_kv_blocks_skipped_exactly(self, dead):
+        """Whole-block kv_keep kills: skipped blocks must not perturb the
+        running softmax state of surviving ones."""
+        L = 32
+        q, k, v = (_randn((2, 2, L, 8), s) for s in (36, 37, 38))
+        keep = jnp.ones((2, 2, L), bool).at[:, :, dead[0]:dead[1]].set(False)
+        keep = keep.at[:, :, 0].set(True)
+        out = flash_attention(q, k, v, causal=True, kv_keep=keep,
+                              block_q=8, block_k=8, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, kv_keep=keep)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5)
+
+    def test_window_one_touches_only_diagonal(self):
+        """window=1 + causal: each row sees exactly itself (block edge)."""
+        L = 24
+        q, k, v = (_randn((1, 1, L, 8), s) for s in (39, 40, 41))
+        out = flash_attention(q, k, v, causal=True, window=1,
+                              block_q=8, block_k=8, interpret=True)
+        np.testing.assert_allclose(np.asarray(out[0, 0]),
+                                   np.asarray(v[0, 0]), atol=2e-5)
+
+    def test_q_pos_packed_rows(self):
+        """Shuffled q rows with original ids == oracle rows re-shuffled."""
+        L = 32
+        q, k, v = (_randn((1, 2, L, 8), s) for s in (42, 43, 44))
+        perm = jax.random.permutation(jax.random.PRNGKey(45), L)
+        q_pos = jnp.broadcast_to(perm.astype(jnp.int32), (1, 2, L))
+        out = flash_attention(q[:, :, perm], k, v, causal=True, window=9,
+                              q_pos=q_pos, block_q=8, block_k=8,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=9)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(want)[:, :, perm], atol=2e-5)
+
+    def test_q_pos_with_ragged_padding_and_keep(self):
+        L = 20  # pads to 24 with bq=8
+        q, k, v = (_randn((1, 1, L, 8), s) for s in (46, 47, 48))
+        perm = jax.random.permutation(jax.random.PRNGKey(49), L)
+        keep = jax.random.bernoulli(jax.random.PRNGKey(50), 0.6, (1, 1, L))
+        keep = keep.at[:, :, 0].set(True)
+        out = flash_attention(q[:, :, perm], k, v, causal=True,
+                              kv_keep=keep,
+                              q_pos=jnp.broadcast_to(perm.astype(jnp.int32),
+                                                     (1, 1, L)),
+                              block_q=8, block_k=8, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, kv_keep=keep)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(want)[:, :, perm], atol=2e-5)
+
+    def test_gqa_grouped_kv_equals_repeated(self):
+        """Grouped (B, KV, L, Dh) k/v read via the index map == the same
+        call with k/v explicitly repeated to H heads."""
+        B, KV, G, L, Dh = 2, 2, 3, 32, 8
+        H = KV * G
+        q = _randn((B, H, L, Dh), 54)
+        k = _randn((B, KV, L, Dh), 55)
+        v = _randn((B, KV, L, Dh), 56)
+        grouped = flash_attention(q, k, v, causal=True, window=9,
+                                  block_q=8, block_k=8, interpret=True)
+        kr = jnp.repeat(k, G, axis=1)
+        vr = jnp.repeat(v, G, axis=1)
+        repeated = flash_attention(q, kr, vr, causal=True, window=9,
+                                   block_q=8, block_k=8, interpret=True)
+        np.testing.assert_allclose(np.asarray(grouped),
+                                   np.asarray(repeated), atol=1e-6)
+        want = ref.flash_attention_ref(q, kr, vr, causal=True, window=9)
+        np.testing.assert_allclose(np.asarray(grouped), np.asarray(want),
+                                   atol=2e-5)
+
+    def test_all_pruned_ragged(self):
+        """Every column dead + ragged L: zero output, nothing NaN."""
+        q, k, v = (_randn((1, 1, 20, 8), s) for s in (51, 52, 53))
+        keep = jnp.zeros((1, 1, 20), bool)
+        out = flash_attention(q, k, v, causal=False, kv_keep=keep,
+                              block_q=8, block_k=8, interpret=True)
         np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
 
 

@@ -8,8 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings
+from _propcheck import strategies as st
 
 from repro.checkpoint import (cleanup_old, latest_step, restore_checkpoint,
                               save_checkpoint)
