@@ -1,7 +1,8 @@
 """Serve a small model with batched requests through the continuous-
-batching engine (prefill + per-tick batched decode, slot recycling).
+batching engines: the dense fixed-slot baseline or the block-pool paged
+engine (chunked prefill, admission on free pages, SPLS page pruning).
 
-  PYTHONPATH=src python examples/serve_batch.py [--spls]
+  PYTHONPATH=src python examples/serve_batch.py [--paged] [--spls]
 """
 
 import argparse
@@ -13,7 +14,8 @@ import jax
 from repro.configs.base import ArchConfig, BlockCfg
 from repro.core.spls import SPLSConfig
 from repro.models import init_params
-from repro.runtime.serve import Request, ServeConfig, ServingEngine
+from repro.serving import (PagedServingEngine, Request, ServeConfig,
+                           ServingEngine)
 
 
 def main():
@@ -23,6 +25,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--spls", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-pool paged KV cache engine")
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
     args = ap.parse_args()
 
     cfg = ArchConfig(
@@ -32,9 +38,12 @@ def main():
         spls=SPLSConfig(enabled=args.spls, k_ratio=0.25, s_threshold=0.6,
                         f_threshold=3, window=8, causal=True))
     params = init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, ServeConfig(
-        n_slots=args.slots,
-        max_len=args.prompt_len + args.max_new + 8))
+    scfg = ServeConfig(n_slots=args.slots,
+                       max_len=args.prompt_len + args.max_new + 8,
+                       page_size=args.page_size,
+                       prefill_chunk=args.prefill_chunk)
+    eng = (PagedServingEngine if args.paged else ServingEngine)(
+        cfg, params, scfg)
 
     reqs = []
     for i in range(args.requests):
@@ -45,17 +54,19 @@ def main():
         eng.submit(r)
 
     t0 = time.perf_counter()
-    ticks = 0
-    while (eng.queue or any(s is not None for s in eng.slots)) and ticks < 2000:
-        eng.tick()
-        ticks += 1
+    done = eng.run_until_drained(max_ticks=2000)
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.output) for r in reqs)
-    print(f"requests={len(reqs)} slots={args.slots} ticks={ticks} "
-          f"spls={args.spls}")
+    print(f"requests={len(reqs)} slots={args.slots} paged={args.paged} "
+          f"spls={args.spls} retired={len(done)}")
     print(f"decoded {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s on CPU)")
+    if args.paged:
+        print(f"pool: peak_pages={eng.stats['peak_pages']} "
+              f"preemptions={eng.stats['preemptions']} "
+              f"prefill_chunks={eng.stats['prefill_chunks']}")
     assert all(r.done for r in reqs), "queue did not drain"
+    assert len(done) == len(reqs)
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.output}")
 

@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: single-token flash decode against a paged KV cache.
+"""Pallas TPU kernel: single-token flash decode against a *contiguous*
+(slot-per-request) KV cache.
 
 Decode cells (decode_32k / long_500k) are memory-bound: one query token
 reads the whole KV cache.  The kernel streams the cache through VMEM in
@@ -6,6 +7,10 @@ reads the whole KV cache.  The kernel streams the cache through VMEM in
 position (`pos`) and an optional sliding window -- SWA decodes touch only
 ``window`` positions, which is what makes h2o/gemma2 long_500k cells
 sub-quadratic in practice.
+
+For the block-pool *paged* variant (per-request block tables over a shared
+page pool, as used by ``repro.serving``) see
+``repro.kernels.paged_decode.paged_flash_decode``.
 
 Grid: (B*KV, S/bk); one program row per (batch, kv-head); the G query
 heads of the group are carried together in the q tile (they share the K/V

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from repro.core.quantizers import hlog_project
 
 __all__ = ["hlog_qmatmul_ref", "flash_attention_ref",
-           "local_similarity_ref", "flash_decode_ref"]
+           "local_similarity_ref", "flash_decode_ref", "paged_decode_ref"]
 
 
 def hlog_qmatmul_ref(xq: jax.Array, wq: jax.Array) -> jax.Array:
@@ -80,3 +80,35 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     a = jnp.where(jnp.isnan(a), 0.0, a)
     return jnp.einsum("bkgl,bkld->bkgd", a,
                       v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_decode_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     pos_pages: jax.Array, tables: jax.Array,
+                     kv_len: jax.Array, pos: jax.Array,
+                     softcap: Optional[float] = None,
+                     window: Optional[int] = None) -> jax.Array:
+    """Gather-then-dense oracle for the paged decode kernels.
+
+    q: (B, KV, G, Dh); k/v_pages: (KV, N, ps, Dh); pos_pages: (N, ps);
+    tables: (B, P); kv_len: written slots per row; pos: original position of
+    the current token (window upper bound).
+    """
+    B, KV, G, Dh = q.shape
+    ps = k_pages.shape[2]
+    P = tables.shape[1]
+    S = P * ps
+    kg = jnp.moveaxis(k_pages[:, tables], 1, 0).reshape(B, KV, S, Dh)
+    vg = jnp.moveaxis(v_pages[:, tables], 1, 0).reshape(B, KV, S, Dh)
+    pg = pos_pages[tables].reshape(B, S)
+    s = jnp.einsum("bkgd,bkld->bkgl", q, kg).astype(jnp.float32) * Dh ** -0.5
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    slot = jnp.arange(S)[None, :]
+    m = slot < kv_len[:, None]
+    if window is not None:
+        m = m & (pos[:, None] - pg < window)
+    s = jnp.where(m[:, None, None, :], s, -jnp.inf)
+    a = jax.nn.softmax(s, axis=-1)
+    a = jnp.where(jnp.isnan(a), 0.0, a)
+    return jnp.einsum("bkgl,bkld->bkgd", a,
+                      vg.astype(jnp.float32)).astype(q.dtype)

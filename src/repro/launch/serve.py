@@ -1,7 +1,11 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id>``.
 
-Spins up the continuous-batching engine on a smoke-scale model and drives a
+Spins up a continuous-batching engine on a smoke-scale model and drives a
 synthetic request stream through it (batched prefill+decode on CPU).
+``--paged`` selects the block-pool paged engine (chunked prefill,
+admission keyed on free pages, SPLS page pruning); the default is the
+dense fixed-slot engine.  Paged serving requires attention-only periods
+(SSM state is O(1) per slot and is not paged).
 """
 
 from __future__ import annotations
@@ -23,11 +27,14 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--spls", action="store_true")
+    ap.add_argument("--paged", action="store_true")
+    ap.add_argument("--page-size", type=int, default=8)
     args = ap.parse_args(argv)
 
     from repro.configs.registry import get_config
     from repro.models import init_params
-    from repro.runtime.serve import Request, ServeConfig, ServingEngine
+    from repro.serving import (PagedServingEngine, Request, ServeConfig,
+                               ServingEngine)
 
     cfg = get_config(args.arch).smoke()
     cfg = dataclasses.replace(cfg, remat=False)
@@ -40,10 +47,17 @@ def main(argv=None):
         print(f"{cfg.name}: embeddings-input arch; engine demo uses tokens "
               "-- skipping")
         return 0
+    if args.paged and cfg.has_mamba:
+        print(f"{cfg.name}: hybrid/SSM arch; paged engine is attention-only "
+              "-- skipping")
+        return 0
 
     params = init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, ServeConfig(
-        n_slots=args.slots, max_len=args.prompt_len + args.max_new + 8))
+    scfg = ServeConfig(n_slots=args.slots,
+                       max_len=args.prompt_len + args.max_new + 8,
+                       page_size=args.page_size)
+    eng = (PagedServingEngine if args.paged else ServingEngine)(
+        cfg, params, scfg)
     reqs = []
     for i in range(args.requests):
         prompt = jax.random.randint(jax.random.PRNGKey(i),
@@ -51,13 +65,13 @@ def main(argv=None):
         r = Request(rid=i, prompt=prompt, max_new_tokens=args.max_new)
         reqs.append(r)
         eng.submit(r)
-    ticks = 0
-    while (eng.queue or any(s is not None for s in eng.slots)) and ticks < 1000:
-        eng.tick()
-        ticks += 1
-    out = {"requests": len(reqs), "ticks": ticks,
+    done = eng.run_until_drained(max_ticks=1000)
+    out = {"requests": len(reqs), "retired": len(done),
            "all_done": all(r.done for r in reqs),
            "outputs": {r.rid: r.output[:8] for r in reqs[:4]}}
+    if args.paged:
+        out["pool"] = {k: eng.stats[k] for k in
+                       ("peak_pages", "preemptions", "prefill_chunks")}
     print(json.dumps(out, indent=1))
     return 0 if out["all_done"] else 1
 

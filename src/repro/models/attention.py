@@ -41,7 +41,8 @@ from .attn_backend import get_backend, resolve_backend
 from .common import apply_rope, dense_init, rms_norm, rope_freqs
 
 __all__ = ["init_attention", "attention_forward", "attention_decode",
-           "KVCache", "init_kv_cache", "head_shard_mode"]
+           "KVCache", "init_kv_cache", "head_shard_mode", "project_qkv",
+           "output_proj"]
 
 
 class KVCache(NamedTuple):
@@ -166,6 +167,12 @@ def _out_proj(cfg: ArchConfig, p: dict, o: jax.Array, mode: str) -> jax.Array:
     else:
         out = jnp.einsum("bkgld,kgdm->blm", o, p["wo"])
     return constrain(out, ("batch", "seq", "embed"))
+
+
+# public seams for alternative execution layers (the paged serving engine
+# projects QKV / re-projects outputs itself, around its block-pool cache)
+project_qkv = _project_qkv
+output_proj = _out_proj
 
 
 def attention_forward(cfg: ArchConfig, p: dict, x: jax.Array,

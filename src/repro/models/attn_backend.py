@@ -45,6 +45,23 @@ with ``q: (B, KV, G, Dh)`` (one token), ``k/v: (B, KV, S, Dh)`` caches.
   * ``pallas_flash_decode`` -- ``repro.kernels.flash_decode`` streaming the
     cache through VMEM in chunks (position- and window-aware block skip).
 
+Paged decode backends (the serving engine's block-pool KV cache,
+``repro.serving``) share::
+
+    fn(cfg, q, k_pages, v_pages, *, pos_pages, tables, kv_len, pos,
+       window) -> o
+
+with ``q: (B, KV, G, Dh)``, ``k/v_pages: (KV, N, ps, Dh)`` page pools,
+``pos_pages: (N, ps)`` original-position ids, ``tables: (B, P)`` block
+tables, ``kv_len: (B,)`` written slots, ``pos: (B,)`` current original
+position.
+
+  * ``xla_paged_decode``    -- XLA gather of the block table into a
+    contiguous view, then dense masked scores.  The fallback / oracle.
+  * ``pallas_paged_decode`` -- ``repro.kernels.paged_decode``: the block
+    table rides in as a scalar-prefetch operand and each page is DMA'd by
+    the BlockSpec index map (no contiguous gather is ever materialized).
+
 ``"auto"`` resolves per call site from platform, sequence length, and the
 sparsity mode -- see :func:`resolve_backend`.
 """
@@ -80,27 +97,32 @@ class _Backend(NamedTuple):
     fn: Callable
     decode: bool
     doc: str
+    paged: bool = False
 
 
 _REGISTRY: Dict[str, _Backend] = {}
 
 
-def register_backend(name: str, decode: bool = False,
+def register_backend(name: str, decode: bool = False, paged: bool = False,
                      doc: str = "") -> Callable:
     """Decorator registering ``fn`` under ``name``; ``decode`` marks
-    single-token backends (different signature, see module docstring)."""
+    single-token backends, ``paged`` marks block-pool paged-cache backends
+    (different signatures, see module docstring)."""
 
     def deco(fn: Callable) -> Callable:
-        _REGISTRY[name] = _Backend(fn, decode, doc or (fn.__doc__ or ""))
+        _REGISTRY[name] = _Backend(fn, decode, doc or (fn.__doc__ or ""),
+                                   paged)
         return fn
 
     return deco
 
 
-def available_backends(decode: Optional[bool] = None) -> Tuple[str, ...]:
-    """Registered backend names, optionally filtered by decode-ness."""
+def available_backends(decode: Optional[bool] = None,
+                       paged: Optional[bool] = None) -> Tuple[str, ...]:
+    """Registered backend names, optionally filtered by decode/paged-ness."""
     return tuple(sorted(n for n, b in _REGISTRY.items()
-                        if decode is None or b.decode == decode))
+                        if (decode is None or b.decode == decode)
+                        and (paged is None or b.paged == paged)))
 
 
 def get_backend(name: str) -> Callable:
@@ -118,12 +140,14 @@ def _platform() -> str:
 
 def resolve_backend(name: Optional[str], cfg, *, L: int, plan=None,
                     q_capacity: Optional[int] = None, decode: bool = False,
+                    paged: bool = False,
                     platform: Optional[str] = None) -> str:
     """Map a configured backend name (possibly ``"auto"``/None) to a
     concrete registry key.
 
     The ``"auto"`` heuristic (documented in models/README.md):
 
+    paged decode: TPU -> ``pallas_paged_decode``; else ``xla_paged_decode``.
     decode:   TPU -> ``pallas_flash_decode``; otherwise the inline dense
               decode path (``xla_dense``).
     forward:  1. ChunkedPlan (long-sequence progressive SPLS)
@@ -143,12 +167,16 @@ def resolve_backend(name: Optional[str], cfg, *, L: int, plan=None,
             raise ValueError(
                 f"unknown attention backend {name!r}; "
                 f"registered: {available_backends()}")
-        if b.decode == decode:
+        if b.decode == decode and b.paged == paged:
             return name
-        # kind mismatch: the one config field drives both contexts, so a
-        # forward name at a decode site (and vice versa) falls through to
-        # the auto choice for this site instead of raising
+        # kind mismatch: the one config field drives every context, so a
+        # name of the wrong kind for this site (forward at decode, dense
+        # decode at a paged site, ...) falls through to the auto choice
+        # for this site instead of raising
     platform = platform or _platform()
+    if decode and paged:
+        return ("pallas_paged_decode" if platform == "tpu"
+                else "xla_paged_decode")
     if decode:
         return ("pallas_flash_decode" if platform == "tpu"
                 else "xla_dense_decode")
@@ -360,3 +388,47 @@ def pallas_flash_decode(cfg, q, k, v, *, pos, window=None) -> jax.Array:
     return flash_decode(q, k, v, pos, softcap=cfg.attn_softcap,
                         window=window, block_k=bk,
                         interpret=_platform() != "tpu")
+
+
+# ---------------------------------------------------------------------------
+# paged decode backends (block-pool KV cache, repro.serving)
+# ---------------------------------------------------------------------------
+
+@register_backend("xla_paged_decode", decode=True, paged=True,
+                  doc="XLA block-table gather + dense masked decode")
+def xla_paged_decode(cfg, q, k_pages, v_pages, *, pos_pages, tables, kv_len,
+                     pos, window=None) -> jax.Array:
+    """q: (B, KV, G, Dh); k/v_pages: (KV, N, ps, Dh); pos_pages: (N, ps);
+    tables: (B, P); kv_len/pos: (B,).  Gathers the sequence's pages into a
+    contiguous (B, KV, P*ps, Dh) view, then runs the dense decode math with
+    a written-slot mask (slot < kv_len) and an original-position window."""
+    B, KV, G, Dh = q.shape
+    ps = k_pages.shape[2]
+    P = tables.shape[1]
+    S = P * ps
+    kg = jnp.moveaxis(k_pages[:, tables], 1, 0).reshape(B, KV, S, Dh)
+    vg = jnp.moveaxis(v_pages[:, tables], 1, 0).reshape(B, KV, S, Dh)
+    pg = pos_pages[tables].reshape(B, S)
+    s = jnp.einsum("bkgd,bkld->bkgl", q, kg) * (Dh ** -0.5)
+    s = _softcap(s, cfg.attn_softcap)
+    slot = jnp.arange(S)[None, :]
+    m = slot < kv_len[:, None]
+    if window is not None:
+        m = m & (pos[:, None] - pg < window)
+    s = jnp.where(m[:, None, None, :], s, jnp.asarray(-1e30, s.dtype))
+    a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgl,bkld->bkgd", a, vg)
+
+
+@register_backend("pallas_paged_decode", decode=True, paged=True,
+                  doc="Pallas paged decode; block-table gather in the DMA")
+def pallas_paged_decode(cfg, q, k_pages, v_pages, *, pos_pages, tables,
+                        kv_len, pos, window=None) -> jax.Array:
+    """Same contract as :func:`xla_paged_decode`, executed by
+    ``repro.kernels.paged_decode.paged_flash_decode``."""
+    from repro.kernels.paged_decode import paged_flash_decode
+
+    return paged_flash_decode(q, k_pages, v_pages, pos_pages, tables,
+                              kv_len, pos, softcap=cfg.attn_softcap,
+                              window=window,
+                              interpret=_platform() != "tpu")

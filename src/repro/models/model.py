@@ -27,7 +27,8 @@ from .blocks import (block_decode, block_forward, init_block,
 from .common import dense_init, dtype_of, rms_norm, softcap
 
 __all__ = ["init_params", "abstract_params", "forward", "loss_fn",
-           "init_cache", "decode_step", "prefill"]
+           "init_cache", "decode_step", "prefill", "embed_inputs",
+           "head_logits"]
 
 Params = Dict[str, Any]
 
@@ -84,6 +85,18 @@ def _head_out(cfg: ArchConfig, params: Params, x: jax.Array) -> jax.Array:
     logits = jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
     logits = softcap(logits, cfg.final_softcap)
     return constrain(logits, ("batch", "seq", "vocab"))
+
+
+# public seams for alternative execution layers (e.g. the paged serving
+# engine in repro.serving, which runs its own period scan over a paged cache)
+def embed_inputs(cfg: ArchConfig, params: Params, inputs: jax.Array):
+    """Token/embedding frontend: (B, L)[int] or (B, L, D) -> (B, L, D)."""
+    return _embed_in(cfg, params, inputs)
+
+
+def head_logits(cfg: ArchConfig, params: Params, x: jax.Array) -> jax.Array:
+    """Final norm + LM head: (B, L, D) -> (B, L, V)."""
+    return _head_out(cfg, params, x)
 
 
 def _period_fn(cfg: ArchConfig, x: jax.Array, pparams) -> jax.Array:

@@ -1,125 +1,12 @@
-"""Batched serving engine: continuous batching over a fixed-slot KV cache.
+"""Compat shim: the serving engine moved to :mod:`repro.serving`.
 
-The engine owns ``n_slots`` cache rows.  Requests join free slots (prefill
-writes their prompt KV), every engine tick decodes one token for all active
-slots in a single batched ``serve_step``, and finished rows free their slot
-for the next queued request -- the standard continuous-batching dataflow.
-When SPLS is enabled, prefill runs the paper's sparse pipeline (where its
-end-to-end computation reduction lands in serving).
+The dense fixed-slot engine (:class:`ServingEngine`) and the block-pool
+paged engine (:class:`PagedServingEngine`) now live in
+``repro.serving.engine``; this module re-exports the public names so
+existing imports (`from repro.runtime.serve import ...`) keep working.
 """
 
-from __future__ import annotations
+from repro.serving import (PagedServingEngine, Request, ServeConfig,
+                           ServingEngine)
 
-import dataclasses
-from collections import deque
-from typing import Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import ArchConfig
-from repro.models import decode_step, init_cache, prefill
-from repro.models.common import dtype_of
-
-__all__ = ["Request", "ServeConfig", "ServingEngine"]
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: jnp.ndarray            # (Lp,) int32
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
-    # filled by the engine:
-    output: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-@dataclasses.dataclass(frozen=True)
-class ServeConfig:
-    n_slots: int = 4
-    max_len: int = 256
-    greedy: bool = True
-    # attention backend override for this engine (None = cfg/auto); see
-    # repro.models.attn_backend -- prefill resolves the forward side
-    # (e.g. "pallas_flash"), ticks resolve the decode side.
-    attn_backend: Optional[str] = None
-
-
-class ServingEngine:
-    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig):
-        assert cfg.input_mode == "tokens", "engine serves token models"
-        if scfg.attn_backend is not None:
-            cfg = dataclasses.replace(cfg, attn_backend=scfg.attn_backend)
-        self.cfg, self.params, self.scfg = cfg, params, scfg
-        self.queue: deque = deque()
-        self.slots: List[Optional[Request]] = [None] * scfg.n_slots
-        self.pos = jnp.zeros((scfg.n_slots,), jnp.int32)
-        self.tokens = jnp.zeros((scfg.n_slots, 1), jnp.int32)
-        self.cache = init_cache(cfg, scfg.n_slots, scfg.max_len)
-        self._decode = jax.jit(
-            lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
-        self._prefill = jax.jit(
-            lambda p, toks: prefill(cfg, p, toks, max_len=scfg.max_len))
-
-    # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def _admit(self) -> None:
-        """Move queued requests into free slots (prefill their prompt)."""
-        for s in range(self.scfg.n_slots):
-            if self.slots[s] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            lp = int(req.prompt.shape[0])
-            logits, cache1 = self._prefill(self.params,
-                                           req.prompt[None, :])
-            # splice this row's prefilled cache into slot s
-            self.cache = jax.tree.map(
-                lambda full, one: full.at[:, s:s + 1].set(one),
-                self.cache, cache1)
-            nxt = int(jnp.argmax(logits[0, -1]))
-            req.output.append(nxt)
-            self.slots[s] = req
-            self.pos = self.pos.at[s].set(lp)
-            self.tokens = self.tokens.at[s, 0].set(nxt)
-
-    def _retire(self) -> None:
-        for s, req in enumerate(self.slots):
-            if req is None:
-                continue
-            hit_eos = req.eos_id is not None and req.output and \
-                req.output[-1] == req.eos_id
-            if len(req.output) >= req.max_new_tokens or hit_eos or \
-                    int(self.pos[s]) >= self.scfg.max_len - 1:
-                req.done = True
-                self.slots[s] = None
-
-    def tick(self) -> int:
-        """One engine iteration; returns number of active slots decoded."""
-        self._admit()
-        active = [s for s, r in enumerate(self.slots) if r is not None]
-        if not active:
-            return 0
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          self.tokens, self.pos)
-        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
-        for s in active:
-            tok = int(nxt[s])
-            self.slots[s].output.append(tok)
-        self.pos = self.pos + jnp.asarray(
-            [1 if self.slots[s] is not None else 0
-             for s in range(self.scfg.n_slots)], jnp.int32)
-        self.tokens = nxt[:, None]
-        self._retire()
-        return len(active)
-
-    def run_until_drained(self, max_ticks: int = 10000) -> List[Request]:
-        done: List[Request] = []
-        seen: set = set()
-        for _ in range(max_ticks):
-            self.tick()
-            if not self.queue and all(s is None for s in self.slots):
-                break
-        return done
+__all__ = ["Request", "ServeConfig", "ServingEngine", "PagedServingEngine"]

@@ -1,0 +1,23 @@
+"""Paged SPLS-aware serving subsystem.
+
+Block-pool KV cache (:mod:`pager`), paged model execution
+(:mod:`paged_model`), continuous-batching scheduler with chunked prefill
+and preemption (:mod:`scheduler`), and the engines (:mod:`engine`).
+See README.md in this directory for the page lifecycle and the SPLS
+page-pruning semantics.
+"""
+
+from .pager import (NULL_PAGE, POS_SENTINEL, PagedKVCache, PagePool,
+                    init_paged_cache, init_pos_pages, spls_token_keep)
+from .paged_model import (paged_decode_step, paged_prefill_chunk,
+                          scatter_prefill)
+from .scheduler import Scheduler, SchedulerConfig, SeqState
+from .engine import PagedServingEngine, Request, ServeConfig, ServingEngine
+
+__all__ = [
+    "NULL_PAGE", "POS_SENTINEL", "PagedKVCache", "PagePool",
+    "init_paged_cache", "init_pos_pages", "spls_token_keep",
+    "paged_decode_step", "paged_prefill_chunk", "scatter_prefill",
+    "Scheduler", "SchedulerConfig", "SeqState",
+    "PagedServingEngine", "Request", "ServeConfig", "ServingEngine",
+]

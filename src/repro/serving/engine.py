@@ -1,0 +1,385 @@
+"""Serving engines: dense fixed-slot and block-pool paged.
+
+:class:`ServingEngine` is the original continuous-batching engine -- a
+dense ``n_slots x max_len`` KV cache, whole-prompt prefill into a free
+slot, one batched decode per tick.  It remains the baseline (and the
+parity oracle) for the paged engine.
+
+:class:`PagedServingEngine` is the production-shaped path: KV lives in a
+shared :class:`~repro.serving.pager.PagePool`, requests hold block tables
+instead of cache rows, prompts longer than a chunk prefill incrementally
+*between* decode ticks (no head-of-line blocking), admission is keyed on
+free pages, and a dry pool preempts the youngest sequence by page
+eviction.  With SPLS enabled, prefill prunes dead KV columns out of the
+pool entirely (``spls_token_keep``), so the paper's sparsity buys
+admission capacity, not just skipped math.
+
+Both engines share :class:`Request`/:class:`ServeConfig` and the sampling
+path: ``greedy=True`` (default) takes the argmax; ``greedy=False`` samples
+with ``temperature`` through a PRNG key threaded from ``seed``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import decode_step, init_cache, prefill
+
+from .pager import (NULL_PAGE, PagePool, init_paged_cache, init_pos_pages,
+                    keep_from_votes, spls_token_votes)
+from .paged_model import (paged_decode_step, paged_prefill_chunk,
+                          scatter_prefill)
+from .scheduler import Scheduler, SchedulerConfig, SeqState
+
+__all__ = ["Request", "ServeConfig", "ServingEngine", "PagedServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: jnp.ndarray            # (Lp,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    n_slots: int = 4
+    max_len: int = 256
+    # sampling: greedy argmax by default; greedy=False samples with
+    # `temperature` through a PRNG key threaded from `seed`
+    greedy: bool = True
+    temperature: float = 1.0
+    seed: int = 0
+    # attention backend override for this engine (None = cfg/auto); see
+    # repro.models.attn_backend -- prefill resolves the forward side
+    # (e.g. "pallas_flash"), ticks resolve the decode side (the paged
+    # engine resolves the *paged* decode side).
+    attn_backend: Optional[str] = None
+    # paged-engine knobs (ignored by the dense engine)
+    page_size: int = 16
+    n_pages: Optional[int] = None   # None -> n_slots * pages(max_len) + 1
+    prefill_chunk: int = 64
+    max_prefills_per_tick: int = 1
+    watermark: int = 0
+    spls_page_prune: bool = True    # prune dead KV columns out of the pool
+    spls_prune_vote: float = 0.5    # head-vote fraction a column must win
+
+
+def _sample_tokens(key: Optional[jax.Array], logits: jax.Array,
+                   greedy: bool, temperature: float) -> jax.Array:
+    """logits (..., V) -> (...,) int32 token ids."""
+    if greedy or temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)
+
+
+class _SamplerMixin:
+    def _init_sampler(self, scfg: ServeConfig) -> None:
+        self.scfg = scfg
+        self._key = jax.random.PRNGKey(scfg.seed)
+
+    def _pick(self, logits: jax.Array) -> jax.Array:
+        key = None
+        if not self.scfg.greedy:
+            self._key, key = jax.random.split(self._key)
+        return _sample_tokens(key, logits, self.scfg.greedy,
+                              self.scfg.temperature)
+
+
+# ---------------------------------------------------------------------------
+# dense fixed-slot engine (the baseline / parity oracle)
+# ---------------------------------------------------------------------------
+
+class ServingEngine(_SamplerMixin):
+    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig):
+        assert cfg.input_mode == "tokens", "engine serves token models"
+        if scfg.attn_backend is not None:
+            cfg = dataclasses.replace(cfg, attn_backend=scfg.attn_backend)
+        self.cfg, self.params = cfg, params
+        self._init_sampler(scfg)
+        self.queue: deque = deque()
+        self.slots: List[Optional[Request]] = [None] * scfg.n_slots
+        self.pos = jnp.zeros((scfg.n_slots,), jnp.int32)
+        self.tokens = jnp.zeros((scfg.n_slots, 1), jnp.int32)
+        self.cache = init_cache(cfg, scfg.n_slots, scfg.max_len)
+        self._retired: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+        self._prefill = jax.jit(
+            lambda p, toks: prefill(cfg, p, toks, max_len=scfg.max_len))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        """Move queued requests into free slots (prefill their prompt)."""
+        for s in range(self.scfg.n_slots):
+            if self.slots[s] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            lp = int(req.prompt.shape[0])
+            logits, cache1 = self._prefill(self.params,
+                                           req.prompt[None, :])
+            # splice this row's prefilled cache into slot s
+            self.cache = jax.tree.map(
+                lambda full, one: full.at[:, s:s + 1].set(one),
+                self.cache, cache1)
+            nxt = int(self._pick(logits[0, -1]))
+            req.output.append(nxt)
+            self.slots[s] = req
+            self.pos = self.pos.at[s].set(lp)
+            self.tokens = self.tokens.at[s, 0].set(nxt)
+
+    def _retire(self) -> None:
+        for s, req in enumerate(self.slots):
+            if req is None:
+                continue
+            hit_eos = req.eos_id is not None and req.eos_id in req.output
+            if len(req.output) >= req.max_new_tokens or hit_eos or \
+                    int(self.pos[s]) >= self.scfg.max_len - 1:
+                req.done = True
+                self.slots[s] = None
+                self._retired.append(req)
+
+    def tick(self) -> int:
+        """One engine iteration; returns number of active slots decoded."""
+        self._admit()
+        self._retire()  # a prefill-emitted token may already hit eos/budget
+        active = [s for s, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.tokens, self.pos)
+        nxt = self._pick(logits[:, 0])
+        for s in active:
+            tok = int(nxt[s])
+            self.slots[s].output.append(tok)
+        self.pos = self.pos + jnp.asarray(
+            [1 if self.slots[s] is not None else 0
+             for s in range(self.scfg.n_slots)], jnp.int32)
+        self.tokens = nxt[:, None]
+        self._retire()
+        return len(active)
+
+    def run_until_drained(self, max_ticks: int = 10000) -> List[Request]:
+        """Tick until queue and slots are empty; returns the requests that
+        retired during this call, in retirement order."""
+        start = len(self._retired)
+        for _ in range(max_ticks):
+            self.tick()
+            if not self.queue and all(s is None for s in self.slots):
+                break
+        return self._retired[start:]
+
+
+# ---------------------------------------------------------------------------
+# paged engine
+# ---------------------------------------------------------------------------
+
+class PagedServingEngine(_SamplerMixin):
+    """Continuous batching over the block-pool paged KV cache."""
+
+    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig):
+        assert cfg.input_mode == "tokens", "engine serves token models"
+        assert all(b.mixer == "attn" for b in cfg.period), \
+            "paged engine is attention-only (SSM state is O(1) per slot)"
+        if scfg.attn_backend is not None:
+            cfg = dataclasses.replace(cfg, attn_backend=scfg.attn_backend)
+        self.cfg, self.params = cfg, params
+        self._init_sampler(scfg)
+
+        ps = scfg.page_size
+        self.page_size = ps
+        self.pages_per_seq = math.ceil(scfg.max_len / ps)
+        n_pages = (scfg.n_pages if scfg.n_pages is not None
+                   else scfg.n_slots * self.pages_per_seq + 1)
+        self.pool = PagePool(n_pages, ps)
+        # chunked prefill needs causal cross-chunk attention and bypasses
+        # the (full-sequence) SPLS plan -> SPLS configs always prefill whole
+        chunkable = cfg.causal and not cfg.spls.enabled
+        self.sched = Scheduler(
+            SchedulerConfig(n_slots=scfg.n_slots,
+                            prefill_chunk=scfg.prefill_chunk,
+                            max_prefills_per_tick=scfg.max_prefills_per_tick,
+                            watermark=scfg.watermark),
+            self.pool, scfg.max_len, chunkable=chunkable)
+        self._prune = cfg.spls.enabled and scfg.spls_page_prune
+
+        self.cache = init_paged_cache(cfg, n_pages, ps)
+        self.pos_pages = init_pos_pages(n_pages, ps)
+        self._retired: List[Request] = []
+        # the old cache / pos_pages references die on reassignment every
+        # tick, so donate them: decode scatters one token in place instead
+        # of copying the whole page pool (donation is a no-op on CPU)
+        self._decode = jax.jit(
+            lambda p, c, pp, tb, kl, cp, t: paged_decode_step(
+                cfg, p, c, pp, tb, kl, cp, t), donate_argnums=(1, 2))
+        self._prefill = jax.jit(lambda p, toks: prefill(cfg, p, toks))
+        self._votes = jax.jit(
+            lambda p, toks: spls_token_votes(cfg, p, toks))
+        self._chunk = jax.jit(
+            lambda p, c, pp, tb, start, toks, valid: paged_prefill_chunk(
+                cfg, p, c, pp, tb, start, toks, valid),
+            donate_argnums=(1, 2))
+
+    # ------------------------------------------------------------------
+    @property
+    def stats(self) -> dict:
+        return {**self.sched.stats,
+                "pages_in_use": self.pool.pages_in_use,
+                "peak_pages": self.pool.peak_in_use,
+                "free_pages": self.pool.free_pages}
+
+    def submit(self, req: Request) -> None:
+        lp = int(req.prompt.shape[0])
+        if lp > self.scfg.max_len:
+            raise ValueError(f"request {req.rid}: prompt {lp} exceeds "
+                             f"max_len {self.scfg.max_len}")
+        self.sched.submit(req, [int(t) for t in np.asarray(req.prompt)],
+                          req.max_new_tokens)
+
+    # ------------------------------------------------------------------
+    def _dest_slots(self, st: SeqState, n: int) -> np.ndarray:
+        """(n,) flat page-slot destinations for logical slots [0, n)."""
+        pages = np.asarray(st.pages, np.int64)
+        sl = np.arange(n)
+        return pages[sl // self.page_size] * self.page_size \
+            + sl % self.page_size
+
+    def _table_row(self, st: SeqState) -> np.ndarray:
+        row = np.full((self.pages_per_seq,), NULL_PAGE, np.int32)
+        row[:len(st.pages)] = st.pages
+        return row
+
+    def _full_prefill(self, st: SeqState) -> None:
+        toks = jnp.asarray(st.tokens, jnp.int32)[None, :]
+        logits, dense_cache = self._prefill(self.params, toks)
+        if self._prune:
+            keep = keep_from_votes(self._votes(self.params, toks[0]),
+                                   self.cfg.n_heads,
+                                   self.scfg.spls_prune_vote)
+        else:
+            keep = np.ones((st.prompt_len,), bool)
+        keep_idx = np.nonzero(keep)[0]
+        n_kept = len(keep_idx)
+        if not self.sched.grow_to(st, n_kept):
+            return  # st itself was preempted; prefill recomputes later
+        dest = self._dest_slots(st, n_kept)
+        self.cache, self.pos_pages = scatter_prefill(
+            self.cache, self.pos_pages, dense_cache,
+            jnp.asarray(keep_idx, jnp.int32), jnp.asarray(dest, jnp.int32))
+        st.kv_len = n_kept
+        st.cur_pos = st.prompt_len
+        st.prefilled = st.prompt_len
+        self._emit_first(st, logits[0, -1])
+
+    def _chunk_prefill(self, st: SeqState) -> None:
+        cs = self.sched.cfg.prefill_chunk
+        start = st.prefilled                 # == st.kv_len (no pruning here)
+        valid = min(cs, st.prompt_len - start)
+        if not self.sched.grow_to(st, start + valid):
+            return
+        chunk = np.zeros((cs,), np.int32)
+        chunk[:valid] = st.tokens[start:start + valid]
+        logits, self.cache, self.pos_pages = self._chunk(
+            self.params, self.cache, self.pos_pages,
+            jnp.asarray(self._table_row(st)),
+            jnp.asarray(start, jnp.int32), jnp.asarray(chunk)[None, :],
+            jnp.asarray(valid, jnp.int32))
+        st.prefilled += valid
+        st.kv_len += valid
+        st.cur_pos += valid
+        self.sched.stats["prefill_chunks"] += 1
+        if st.phase == "decode":
+            self._emit_first(st, logits[0, 0])
+
+    def _emit_first(self, st: SeqState, logits_row: jax.Array) -> None:
+        tok = int(self._pick(logits_row))
+        st.req.output.append(tok)
+        st.budget -= 1
+
+    # ------------------------------------------------------------------
+    def tick(self) -> int:
+        """One engine iteration; returns number of slots decoded."""
+        self.sched.admit()
+
+        for st in self.sched.plan_prefills():
+            if self.sched.slots[st.slot] is not st:
+                continue  # preempted by an earlier prefill this tick
+            if self.sched.use_chunks(st.prompt_len):
+                self._chunk_prefill(st)
+            else:
+                self._full_prefill(st)
+        self._retire_finished()  # prefill-emitted token may hit eos/budget
+
+        # grow pages for every decode-ready row (may preempt the youngest)
+        for st in list(self.sched.decode_ready()):
+            if self.sched.slots[st.slot] is not st or st.budget <= 0:
+                continue
+            self.sched.grow_to(st, st.kv_len + 1)
+        active = [st for st in self.sched.decode_ready() if st.budget > 0
+                  and len(st.pages) * self.page_size > st.kv_len]
+
+        n_decoded = 0
+        if active:
+            n_slots = self.scfg.n_slots
+            tables = np.full((n_slots, self.pages_per_seq), NULL_PAGE,
+                             np.int32)
+            kv_len = np.zeros((n_slots,), np.int32)
+            cur_pos = np.zeros((n_slots,), np.int32)
+            tokens = np.zeros((n_slots, 1), np.int32)
+            for st in active:
+                tables[st.slot] = self._table_row(st)
+                kv_len[st.slot] = st.kv_len
+                cur_pos[st.slot] = st.cur_pos
+                tokens[st.slot, 0] = st.req.output[-1]
+            logits, self.cache, self.pos_pages = self._decode(
+                self.params, self.cache, self.pos_pages,
+                jnp.asarray(tables), jnp.asarray(kv_len),
+                jnp.asarray(cur_pos), jnp.asarray(tokens))
+            nxt = self._pick(logits[:, 0])
+            for st in active:
+                st.req.output.append(int(nxt[st.slot]))
+                st.kv_len += 1
+                st.cur_pos += 1
+                st.budget -= 1
+            n_decoded = len(active)
+
+        self._retire_finished()
+        return n_decoded
+
+    def _retire_finished(self) -> None:
+        for st in list(self.sched.active()):
+            req = st.req
+            hit_eos = req.eos_id is not None and req.eos_id in req.output
+            if (st.phase == "decode"
+                    and (st.budget <= 0 or hit_eos
+                         or st.cur_pos >= self.scfg.max_len - 1)):
+                req.done = True
+                self.sched.retire(st)
+                self._retired.append(req)
+
+    def run_until_drained(self, max_ticks: int = 10000) -> List[Request]:
+        """Tick until everything drains; returns the requests retired
+        during this call, in retirement order."""
+        start = len(self._retired)
+        for _ in range(max_ticks):
+            self.tick()
+            if self.sched.idle():
+                break
+        return self._retired[start:]

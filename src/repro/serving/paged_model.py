@@ -1,0 +1,246 @@
+"""Model execution against the block-pool paged KV cache.
+
+Mirrors the dense serving path in :mod:`repro.models.model` (scan over
+periods, one lowered period body) but threads :class:`PagedKVCache` pages,
+a shared block table, and original-position ids instead of a dense
+``(B, KV, max_len, Dh)`` slab:
+
+* :func:`paged_decode_step` -- one batched decode tick.  Each layer writes
+  the new token's K/V into the slot the block table names (inactive rows
+  write to the null page) and attends through the paged decode backends
+  (``xla_paged_decode`` / ``pallas_paged_decode``).
+* :func:`paged_prefill_chunk` -- chunked prefill: one prompt chunk (padded
+  to a static chunk size) is projected at its original positions, written
+  into freshly allocated slots, and attends over *all* slots written so far
+  -- cross-chunk causal attention, which is what lets the scheduler
+  interleave long prefills with decode ticks.
+* :func:`scatter_prefill` -- full-prefill ingestion: takes the dense cache
+  :func:`repro.models.model.prefill` produced, gathers the kept columns
+  (SPLS page pruning), and scatters them into pages.
+
+All functions are functional: caches/pos_pages go in, updated ones come
+out; the engine owns jit boundaries and the host-side pool bookkeeping.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import resolve_backend, get_backend
+from repro.models.attention import project_qkv, output_proj
+from repro.models.common import dtype_of, rms_norm, softcap as _softcap
+from repro.models.model import embed_inputs, head_logits
+from repro.models.moe import ffn_forward
+
+from .pager import PagedKVCache
+
+__all__ = ["paged_decode_step", "paged_prefill_chunk", "scatter_prefill"]
+
+
+def _cast_params(pparams, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, pparams)
+
+
+def _write_token(kc: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
+                 flat: jax.Array) -> PagedKVCache:
+    """Scatter one token's K/V (B, KV, 1, Dh) into flat page slots (B,)."""
+    KV, N, ps, Dh = kc.k_pages.shape
+    kf = kc.k_pages.reshape(KV, N * ps, Dh)
+    vf = kc.v_pages.reshape(KV, N * ps, Dh)
+    kf = kf.at[:, flat].set(jnp.moveaxis(k_new[:, :, 0], 0, 1))
+    vf = vf.at[:, flat].set(jnp.moveaxis(v_new[:, :, 0], 0, 1))
+    return PagedKVCache(kf.reshape(KV, N, ps, Dh), vf.reshape(KV, N, ps, Dh))
+
+
+def _decode_flat_slots(tables: jax.Array, kv_len: jax.Array,
+                       page_size: int) -> jax.Array:
+    """(B,) flat page-slot index for each row's next write (slot kv_len).
+    Inactive rows (all-null tables, kv_len 0) resolve to the null page."""
+    page = jnp.take_along_axis(tables, (kv_len // page_size)[:, None],
+                               axis=1)[:, 0]
+    return page * page_size + kv_len % page_size
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def paged_decode_step(cfg: ArchConfig, params, cache, pos_pages: jax.Array,
+                      tables: jax.Array, kv_len: jax.Array,
+                      cur_pos: jax.Array, tokens: jax.Array,
+                      backend: Optional[str] = None):
+    """One batched decode tick over the paged cache.
+
+    tokens: (B, 1) int32; tables: (B, P); kv_len: (B,) written slots;
+    cur_pos: (B,) original position of this token.  Every layer writes the
+    token's K/V at slot ``kv_len`` (whose page the engine has already
+    ensured) and attends over ``kv_len + 1`` slots.  Returns
+    ``(logits (B, 1, V), new_cache, new_pos_pages)``.
+    """
+    ps = pos_pages.shape[1]
+    N = pos_pages.shape[0]
+    flat = _decode_flat_slots(tables, kv_len, ps)
+    pos_pages = pos_pages.reshape(N * ps).at[flat].set(cur_pos) \
+        .reshape(N, ps)
+    n_valid = kv_len + 1
+    name = resolve_backend(backend or cfg.attn_backend, cfg, L=N * ps,
+                           decode=True, paged=True)
+    fn = get_backend(name)
+    dtype = dtype_of(cfg.compute_dtype)
+    x = embed_inputs(cfg, params, tokens)
+
+    def scan_body(x, inp):
+        pparams, pcache = inp
+        pparams = _cast_params(pparams, dtype)
+        new_caches = []
+        for blk, bp, kc in zip(cfg.period, pparams, pcache):
+            xn = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            q, k_new, v_new = project_qkv(cfg, bp["attn"], xn,
+                                          cur_pos[:, None], "structured")
+            kc = _write_token(kc, k_new, v_new, flat)
+            o = fn(cfg, q[:, :, :, 0], kc.k_pages, kc.v_pages,
+                   pos_pages=pos_pages, tables=tables, kv_len=n_valid,
+                   pos=cur_pos, window=blk.window)
+            h = output_proj(cfg, bp["attn"], o[:, :, :, None], "structured")
+            if cfg.use_post_norm:
+                h = rms_norm(h, bp["post_ln1"], cfg.norm_eps)
+            x = x + h
+            if blk.has_ffn:
+                xn2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+                h2 = ffn_forward(cfg, blk.use_moe, bp["ffn"], xn2)
+                if cfg.use_post_norm:
+                    h2 = rms_norm(h2, bp["post_ln2"], cfg.norm_eps)
+                x = x + h2
+            new_caches.append(kc)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(scan_body, x, (params["periods"], cache))
+    return head_logits(cfg, params, x), new_cache, pos_pages
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+def paged_prefill_chunk(cfg: ArchConfig, params, cache,
+                        pos_pages: jax.Array, table: jax.Array,
+                        start: jax.Array, tokens: jax.Array,
+                        valid: jax.Array):
+    """Process one prompt chunk for a single sequence (B = 1).
+
+    tokens: (1, CS) chunk padded to the static chunk size; start: ()
+    written slots so far (== original position base: the chunked path never
+    prunes, so slot index == position); valid: () real tokens in this
+    chunk; table: (P,) the sequence's block table (pages for
+    ``start + valid`` slots already allocated).  Chunk queries attend over
+    every slot written so far *plus* this chunk (cross-chunk causal
+    attention by original position ids).  Returns
+    ``(logits (1, 1, V) for the chunk's last valid position, new_cache,
+    new_pos_pages)``; only the final chunk's logits are meaningful (they
+    seed the first decoded token) -- the LM head is not run for the other
+    ``CS - 1`` rows.
+    """
+    assert cfg.causal, "chunked prefill needs causal attention"
+    _, CS = tokens.shape
+    N, ps = pos_pages.shape
+    S = table.shape[0] * ps
+    dtype = dtype_of(cfg.compute_dtype)
+
+    idx = jnp.arange(CS, dtype=jnp.int32)
+    sl = start + idx                                   # destination slots
+    page = table[sl // ps]
+    flat = jnp.where(idx < valid, page * ps + sl % ps, 0)
+    positions = (start + idx)[None, :]                 # original ids
+    pos_pages = pos_pages.reshape(N * ps).at[flat].set(sl).reshape(N, ps)
+    n_valid = start + valid
+    pg = pos_pages[table].reshape(S)                   # slot -> original id
+    slot_idx = jnp.arange(S)
+
+    x = embed_inputs(cfg, params, tokens)
+
+    def attend(blk, q, kc):
+        KV = kc.k_pages.shape[0]
+        kg = kc.k_pages[:, table][None].reshape(1, KV, S, -1)
+        vg = kc.v_pages[:, table][None].reshape(1, KV, S, -1)
+        Dh = q.shape[-1]
+        s = jnp.einsum("bkgqd,bkld->bkgql", q, kg) * (Dh ** -0.5)
+        s = _softcap(s, cfg.attn_softcap)
+        m = slot_idx[None, :] < n_valid
+        m = m & (pg[None, :] <= positions[0][:, None])
+        if blk.window is not None:
+            m = m & (positions[0][:, None] - pg[None, :] < blk.window)
+        s = jnp.where(m[None, None, None], s, jnp.asarray(-1e30, s.dtype))
+        a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+        return jnp.einsum("bkgql,bkld->bkgqd", a, vg)
+
+    def scan_body(x, inp):
+        pparams, pcache = inp
+        pparams = _cast_params(pparams, dtype)
+        new_caches = []
+        for blk, bp, kc in zip(cfg.period, pparams, pcache):
+            xn = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            q, k_new, v_new = project_qkv(cfg, bp["attn"], xn, positions,
+                                          "structured")
+            KV, N_, ps_, Dh = kc.k_pages.shape
+            kf = kc.k_pages.reshape(KV, N_ * ps_, Dh).at[:, flat] \
+                .set(k_new[0])
+            vf = kc.v_pages.reshape(KV, N_ * ps_, Dh).at[:, flat] \
+                .set(v_new[0])
+            kc = PagedKVCache(kf.reshape(KV, N_, ps_, Dh),
+                              vf.reshape(KV, N_, ps_, Dh))
+            o = attend(blk, q, kc)
+            h = output_proj(cfg, bp["attn"], o, "structured")
+            if cfg.use_post_norm:
+                h = rms_norm(h, bp["post_ln1"], cfg.norm_eps)
+            x = x + h
+            if blk.has_ffn:
+                xn2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+                h2 = ffn_forward(cfg, blk.use_moe, bp["ffn"], xn2)
+                if cfg.use_post_norm:
+                    h2 = rms_norm(h2, bp["post_ln2"], cfg.norm_eps)
+                x = x + h2
+            new_caches.append(kc)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(scan_body, x, (params["periods"], cache))
+    x_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
+    return head_logits(cfg, params, x_last), new_cache, pos_pages
+
+
+# ---------------------------------------------------------------------------
+# full-prefill ingestion (with SPLS page pruning)
+# ---------------------------------------------------------------------------
+
+def scatter_prefill(cache, pos_pages: jax.Array, dense_cache,
+                    keep_idx: jax.Array, flat: jax.Array
+                    ) -> Tuple[tuple, jax.Array]:
+    """Move a full prefill's kept KV columns into pages.
+
+    dense_cache: the per-layer dense cache from
+    :func:`repro.models.model.prefill` on a batch of one (arrays
+    ``(n_periods, 1, KV, S, Dh)`` per period block); keep_idx: (n_kept,)
+    original positions that survive SPLS pruning (all positions when
+    pruning is off); flat: (n_kept,) destination flat page slots.  The
+    kept columns land compacted; ``pos_pages`` records their original ids.
+    """
+    N, ps = pos_pages.shape
+    pos_pages = pos_pages.reshape(N * ps).at[flat] \
+        .set(keep_idx.astype(jnp.int32)).reshape(N, ps)
+
+    new_blocks = []
+    for pc, dc in zip(cache, dense_cache):
+        nP, KV, N_, ps_, Dh = pc.k_pages.shape
+        rows_k = dc.k[:, 0][:, :, keep_idx]            # (nP, KV, n_kept, Dh)
+        rows_v = dc.v[:, 0][:, :, keep_idx]
+        kf = pc.k_pages.reshape(nP, KV, N_ * ps_, Dh).at[:, :, flat] \
+            .set(rows_k).reshape(nP, KV, N_, ps_, Dh)
+        vf = pc.v_pages.reshape(nP, KV, N_ * ps_, Dh).at[:, :, flat] \
+            .set(rows_v).reshape(nP, KV, N_, ps_, Dh)
+        new_blocks.append(PagedKVCache(kf, vf))
+    return tuple(new_blocks), pos_pages

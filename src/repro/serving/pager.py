@@ -1,0 +1,192 @@
+"""Block-pool paged KV cache: pages, free list, and SPLS page pruning.
+
+The pool owns ``n_pages`` fixed-size pages per layer, shared by every
+sequence in the engine.  A sequence's KV lives in the pages its block table
+names; pages are allocated on demand (one page covers ``page_size`` token
+slots across *all* KV heads of every layer) and returned to the free list
+when the request retires or is preempted.
+
+Page 0 is the reserved **null page**: it fills unallocated block-table
+entries and absorbs writes from inactive batch rows.  Reads of it are
+always masked (slot >= kv_len), so its contents never matter.
+
+SPLS page pruning (the serving-side realization of the paper's zero-column
+detection): at prefill time, prompt positions whose K/V columns the
+:class:`~repro.core.spls.SparsityPlan` marks dead receive **no slot at
+all** -- the kept columns are compacted into pages and each slot remembers
+its *original* position id (``pos_pages``), which is what keeps RoPE,
+causality, and sliding windows exact after compaction.  A pruned request
+therefore occupies ``ceil(kept / page_size)`` pages instead of
+``ceil(prompt / page_size)``: the paper's inter-row sparsity becomes
+measurable pool headroom and admission capacity (cf. SpAtten's cascade
+token pruning).
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["NULL_PAGE", "POS_SENTINEL", "PagedKVCache", "PagePool",
+           "init_paged_cache", "init_pos_pages", "keep_from_votes",
+           "spls_token_keep", "spls_token_votes"]
+
+NULL_PAGE = 0
+# pos_pages filler for never-written slots.  Correctness never rests on it:
+# unwritten/stale slots are excluded by the `slot < kv_len` mask (and by
+# `id <= position` in the chunked-prefill path).  The sentinel only keeps
+# such slots inert in position arithmetic -- a window test `pos - id <
+# window` on a sentinel is far *below* the window, i.e. it would pass, so
+# the kv_len mask must always stay ANDed in.
+POS_SENTINEL = 1 << 30
+
+
+class PagedKVCache(NamedTuple):
+    """One attention layer's page pool (leading ``n_periods`` axis when part
+    of the stacked model cache): k/v_pages ``(..., KV, n_pages, ps, Dh)``."""
+
+    k_pages: jax.Array
+    v_pages: jax.Array
+
+
+class PagePool:
+    """Free-list allocator over the shared page pool (host-side).
+
+    Page ids are plain ints; the engine owns the device arrays.  Allocation
+    is all-or-nothing so a request can never deadlock holding half of what
+    it needs.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError("pool needs >= 2 pages (page 0 is the null page)")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: deque = deque(range(1, n_pages))
+        self.peak_in_use = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (the null page is never handed out)."""
+        return self.n_pages - 1
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return math.ceil(n_tokens / self.page_size) if n_tokens > 0 else 0
+
+    # ------------------------------------------------------------------
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` pages from the free list, or None if short."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.popleft() for _ in range(n)]
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            assert p != NULL_PAGE, "null page is not allocatable"
+            self._free.append(p)
+
+
+# ---------------------------------------------------------------------------
+# device-side storage
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg, n_pages: int, page_size: int):
+    """Stacked-over-periods paged cache pytree, mirroring
+    :func:`repro.models.model.init_cache` but with pages instead of a dense
+    ``(B, KV, max_len, Dh)`` slab: one :class:`PagedKVCache` per period
+    block with arrays ``(n_periods, KV, n_pages, ps, Dh)``.
+
+    The paged engine is attention-only (asserted by the engine); there is no
+    paged analogue of the Mamba state because SSM state is O(1) per slot.
+    """
+    from repro.models.common import dtype_of
+
+    dtype = dtype_of(cfg.compute_dtype)
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def one_block(blk):
+        assert blk.mixer == "attn", "paged cache covers attention blocks only"
+        # distinct buffers (not one aliased zeros array): the engine donates
+        # the cache to its jits, and XLA rejects donating a buffer twice
+        shape = (cfg.n_periods, KV, n_pages, page_size, Dh)
+        return PagedKVCache(k_pages=jnp.zeros(shape, dtype),
+                            v_pages=jnp.zeros(shape, dtype))
+
+    return tuple(one_block(blk) for blk in cfg.period)
+
+
+def init_pos_pages(n_pages: int, page_size: int) -> jax.Array:
+    """(n_pages, ps) int32 original-position ids, sentinel-filled.  Shared by
+    every layer: all layers write the same token at the same slot."""
+    return jnp.full((n_pages, page_size), POS_SENTINEL, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# SPLS page pruning policy
+# ---------------------------------------------------------------------------
+
+def spls_token_votes(cfg, params, prompt: jax.Array) -> jax.Array:
+    """(Lp,) int32 head votes for keeping each prompt KV column.
+
+    Runs the paper's SPLS prediction (HLog PAM -> top-k -> zero-column
+    detection) on the layer-0 normalized input and counts how many of the
+    H = KV*G heads retain each column.  Pure and jit-safe -- the engine
+    jits it once per prompt shape (alongside the per-shape prefill jit).
+    """
+    from repro.models.blocks import build_block_plan
+    from repro.models.common import dtype_of, rms_norm
+
+    Lp = prompt.shape[0]
+    blk0_params = jax.tree.map(lambda a: a[0], params["periods"][0])
+    dtype = dtype_of(cfg.compute_dtype)
+    x = params["embed"][prompt[None, :]].astype(dtype)
+    if cfg.scale_embedding:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    xn = rms_norm(x, blk0_params["ln1"], cfg.norm_eps)
+    plan = build_block_plan(cfg, blk0_params, xn)
+    return plan.kv_keep[0].reshape(-1, Lp).sum(axis=0).astype(jnp.int32)
+
+
+def keep_from_votes(votes: np.ndarray, n_heads: int,
+                    vote: float) -> np.ndarray:
+    """Threshold head votes into a keep mask; the final token is always
+    kept (it anchors the decode continuation)."""
+    need = max(1, math.ceil(vote * n_heads))
+    keep = np.asarray(votes) >= need
+    keep = np.array(keep)
+    keep[-1] = True
+    return keep
+
+
+def spls_token_keep(cfg, params, prompt: jax.Array,
+                    vote: float = 0.5) -> np.ndarray:
+    """(Lp,) bool keep mask for prompt KV columns, from the layer-0 plan.
+
+    A token keeps its page slot iff at least ``ceil(vote * H)`` of the
+    H = KV*G heads retain its column (``vote=0`` degenerates to the
+    any-head union, ``vote=1`` demands unanimity) -- the MFI idea of
+    cross-head agreement applied to serving memory, since a page slot is
+    shared by every head and, SpAtten-style, by every layer.  All-True
+    when SPLS is disabled.
+    """
+    Lp = int(prompt.shape[0])
+    if not cfg.spls.enabled:
+        return np.ones((Lp,), bool)
+    votes = spls_token_votes(cfg, params, prompt)
+    return keep_from_votes(np.asarray(votes), cfg.n_heads, vote)

@@ -1,0 +1,189 @@
+"""Continuous-batching scheduler: chunked prefill, admission, preemption.
+
+Pure host-side policy over the :class:`~repro.serving.pager.PagePool`; the
+engine executes whatever the scheduler decides.  The dataflow per tick:
+
+1. **admit** -- waiting requests move into free batch slots while the pool
+   can cover their first unit of work (admission control is keyed on free
+   pages, not slots alone).
+2. **prefill** -- at most ``max_prefills_per_tick`` prefill-phase sequences
+   advance by one prompt chunk.  Decode never waits for a whole prompt:
+   a 10k-token prefill is sliced into ``prefill_chunk``-token pieces
+   interleaved with decode ticks (no head-of-line blocking).
+3. **decode** -- every decode-phase sequence produces one token.  Crossing
+   a page boundary allocates a page on demand; when the pool is dry the
+   youngest other sequence is **preempted by page eviction**: its pages go
+   back to the free list and the request re-queues at the *front* of the
+   waiting line with its generated tokens folded into the prompt
+   (recompute-style preemption -- greedy decoding reproduces the identical
+   continuation after re-prefill, *unless* SPLS page pruning is on: the
+   resume re-plans over the extended sequence and may prune a different
+   column set, so pruned outputs can depend on pool pressure).
+
+Sequences whose worst-case footprint (prompt + max_new tokens) exceeds the
+pool are rejected at submit: they could never run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional
+
+from .pager import PagePool
+
+__all__ = ["SchedulerConfig", "SeqState", "Scheduler"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    n_slots: int = 4
+    prefill_chunk: int = 64        # prompt tokens advanced per prefill tick
+    max_prefills_per_tick: int = 1  # chunked-prefill fairness knob
+    watermark: int = 0              # free pages held back at admission
+
+
+@dataclasses.dataclass
+class SeqState:
+    """One admitted sequence (batch row)."""
+
+    req: object                    # the engine's Request
+    base_prompt: List[int]         # the request's original prompt tokens
+    tokens: List[int]              # prefill target: base (+ regenerated
+    #                                output when resuming after preemption)
+    budget: int                    # new tokens still to produce
+    slot: int
+    admit_seq: int                 # admission order (preemption victim key)
+    pages: List[int] = dataclasses.field(default_factory=list)
+    kv_len: int = 0                # page slots written
+    cur_pos: int = 0               # next original position
+    prefilled: int = 0             # prompt tokens processed
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def phase(self) -> str:
+        return "prefill" if self.prefilled < self.prompt_len else "decode"
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig, pool: PagePool,
+                 max_len: int, chunkable: bool = True):
+        self.cfg = cfg
+        self.pool = pool
+        self.max_len = max_len
+        # chunked prefill needs causal cross-chunk attention and bypasses
+        # the SPLS plan (full-sequence); the engine disables it otherwise
+        self.chunkable = chunkable
+        self.waiting: deque = deque()   # (req, base_prompt, tokens, budget)
+        self.slots: List[Optional[SeqState]] = [None] * cfg.n_slots
+        self._admit_seq = 0
+        self.stats = {"admitted": 0, "preemptions": 0, "retired": 0,
+                      "prefill_chunks": 0}
+
+    # ------------------------------------------------------------------
+    def submit(self, req, prompt_tokens: List[int], budget: int) -> None:
+        lp = len(prompt_tokens)
+        first = (min(lp, self.cfg.prefill_chunk) if self.use_chunks(lp)
+                 else lp)
+        # both the lifetime footprint and the admission need (first unit of
+        # work + watermark) must fit, else the request could never run
+        worst = max(self.pool.pages_for(min(lp + budget, self.max_len)),
+                    self.pool.pages_for(first) + self.cfg.watermark)
+        if worst > self.pool.capacity:
+            raise ValueError(
+                f"request {req.rid}: needs up to {worst} pages but the pool "
+                f"only has {self.pool.capacity}")
+        self.waiting.append((req, prompt_tokens, list(prompt_tokens), budget))
+
+    def active(self) -> List[SeqState]:
+        return [s for s in self.slots if s is not None]
+
+    def decode_ready(self) -> List[SeqState]:
+        return [s for s in self.slots if s is not None
+                and s.phase == "decode"]
+
+    def idle(self) -> bool:
+        return not self.waiting and not self.active()
+
+    # ------------------------------------------------------------------
+    def admit(self) -> List[SeqState]:
+        """Fill free slots from the waiting queue while pages allow."""
+        admitted = []
+        for slot in range(self.cfg.n_slots):
+            if self.slots[slot] is not None or not self.waiting:
+                continue
+            req, base, tokens, budget = self.waiting[0]
+            first = (min(len(tokens), self.cfg.prefill_chunk)
+                     if self.use_chunks(len(tokens)) else len(tokens))
+            need = self.pool.pages_for(first) + self.cfg.watermark
+            if need > self.pool.free_pages:
+                break  # FIFO: don't let later requests starve the head
+            self.waiting.popleft()
+            st = SeqState(req=req, base_prompt=base, tokens=tokens,
+                          budget=budget, slot=slot,
+                          admit_seq=self._admit_seq)
+            self._admit_seq += 1
+            self.slots[slot] = st
+            self.stats["admitted"] += 1
+            admitted.append(st)
+        return admitted
+
+    def use_chunks(self, prompt_len: int) -> bool:
+        return self.chunkable and prompt_len > self.cfg.prefill_chunk
+
+    def plan_prefills(self) -> List[SeqState]:
+        """Prefill-phase sequences to advance this tick, oldest first."""
+        pending = sorted((s for s in self.slots
+                          if s is not None and s.phase == "prefill"),
+                         key=lambda s: s.admit_seq)
+        return pending[:self.cfg.max_prefills_per_tick]
+
+    # ------------------------------------------------------------------
+    def grow_to(self, st: SeqState, n_slots_total: int) -> bool:
+        """Ensure ``st`` owns pages covering ``n_slots_total`` written
+        slots, preempting younger sequences when the pool runs dry.
+        Returns False if ``st`` itself had to be preempted (last resort:
+        no other sequence holds pages to evict)."""
+        while True:
+            need = self.pool.pages_for(n_slots_total) - len(st.pages)
+            if need <= 0:
+                return True
+            got = self.pool.alloc(need)
+            if got is not None:
+                st.pages.extend(got)
+                return True
+            victim = self._pick_victim(st)
+            if victim is None:
+                self.preempt(st)
+                return False
+            self.preempt(victim)
+
+    def _pick_victim(self, requester: SeqState) -> Optional[SeqState]:
+        others = [s for s in self.slots
+                  if s is not None and s is not requester and s.pages]
+        if not others:
+            return None
+        return max(others, key=lambda s: s.admit_seq)  # youngest first
+
+    def preempt(self, st: SeqState) -> None:
+        """Evict ``st``'s pages and requeue it at the front of the line
+        (recompute-style): tokens generated so far fold into the prefill
+        target, so greedy decoding resumes the identical continuation
+        (exactly -- unless SPLS page pruning re-plans the longer sequence
+        differently; see the module docstring)."""
+        self.pool.free(st.pages)
+        st.pages = []
+        self.slots[st.slot] = None
+        tokens = list(st.base_prompt) + list(st.req.output)
+        budget = st.req.max_new_tokens - len(st.req.output)
+        self.waiting.appendleft((st.req, st.base_prompt, tokens, budget))
+        self.stats["preemptions"] += 1
+
+    def retire(self, st: SeqState) -> None:
+        self.pool.free(st.pages)
+        st.pages = []
+        self.slots[st.slot] = None
+        self.stats["retired"] += 1

@@ -85,7 +85,9 @@ def _block_kill(plan: SparsityPlan, lo: int, hi: int) -> SparsityPlan:
 
 
 FORWARD = sorted(available_backends(decode=False))
-DECODE = sorted(available_backends(decode=True))
+# contiguous-cache decode backends; the paged ones (different signature)
+# are covered by tests/test_paged_decode.py
+DECODE = sorted(available_backends(decode=True, paged=False))
 
 
 class TestRegistry:
@@ -93,6 +95,8 @@ class TestRegistry:
         assert set(FORWARD) >= {"xla_dense", "xla_packed", "xla_chunked",
                                 "pallas_flash"}
         assert set(DECODE) >= {"xla_dense_decode", "pallas_flash_decode"}
+        assert set(available_backends(decode=True, paged=True)) >= {
+            "xla_paged_decode", "pallas_paged_decode"}
 
     def test_unknown_name_raises(self):
         with pytest.raises(ValueError, match="unknown attention backend"):
