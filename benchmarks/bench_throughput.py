@@ -39,18 +39,25 @@ def _tree_bytes(tree) -> int:
 
 
 def _measure_engine(mode: str):
-    """mode: dense | paged | paged_spls.  Returns a derived-metrics dict."""
+    """mode: dense | paged | paged_spls | paged_chunked |
+    paged_spls_chunked.  The ``*_chunked`` variants prefill long prompts
+    in 16-token chunks (interleaved with decode); ``paged_spls_chunked``
+    is the progressive-SPLS serving path -- the plan streams per chunk and
+    kept KV columns compact at end of prefill.  Returns a derived-metrics
+    dict."""
     from repro.models import init_params
     from repro.serving import (PagedServingEngine, Request, ServeConfig,
                                ServingEngine)
 
-    spls = mode == "paged_spls"
+    chunked = mode.endswith("_chunked")
+    spls = mode.startswith("paged_spls")
     cfg = _bert_serving_cfg(spls)
     params = init_params(cfg, jax.random.PRNGKey(0))
     max_len = _PROMPT + _MAX_NEW + _PS
     scfg = ServeConfig(n_slots=_SLOTS, max_len=max_len, page_size=_PS,
                        attn_backend=None if mode == "dense"
                        else "xla_paged_decode",
+                       prefill_chunk=16 if chunked else 64,
                        spls_page_prune=spls, spls_prune_vote=1.0)
     eng = (ServingEngine if mode == "dense"
            else PagedServingEngine)(cfg, params, scfg)
@@ -71,7 +78,11 @@ def _measure_engine(mode: str):
         kv_bytes = _tree_bytes(eng.cache)           # n_slots x max_len slab
         pages = None
     else:
-        page_bytes = _tree_bytes(eng.cache) / (eng.pool.n_pages)
+        # the SPLS predictor cache is page-parallel pool memory: charge it
+        pool_bytes = _tree_bytes(eng.cache)
+        if eng.pred_cache is not None:
+            pool_bytes += _tree_bytes(eng.pred_cache)
+        page_bytes = pool_bytes / eng.pool.n_pages
         kv_bytes = int(eng.stats["peak_pages"] * page_bytes)
         pages = eng.stats["peak_pages"]
     out = {"tok_s": round(tokens / dt, 1),
@@ -109,9 +120,12 @@ def run():
     rows.append(("energy/attention_paper_reference", 0.0, {
         "energy_eff_gops_w": 6677, "vs_spatten": 2.95, "vs_sanger": 2.26}))
 
-    # measured serving: dense slab vs paged pool vs paged+SPLS pruning
+    # measured serving: dense slab vs paged pool vs paged+SPLS pruning,
+    # plus the long-prompt chunked-prefill pair (dense chunked vs the
+    # progressive chunked+SPLS path -- the acceptance comparison)
     derived = {}
-    for mode in ("dense", "paged", "paged_spls"):
+    for mode in ("dense", "paged", "paged_spls", "paged_chunked",
+                 "paged_spls_chunked"):
         us, d = _measure_engine(mode)
         derived[mode] = d
         rows.append((f"serving/{mode}", round(us, 1), d))
@@ -122,4 +136,14 @@ def run():
         "req_per_mb_paged": derived["paged"]["req_per_mb"],
         "req_per_mb_paged_spls": derived["paged_spls"]["req_per_mb"],
         "paged_spls_vs_dense_x": round(gain, 2)}))
+    ck, cs = derived["paged_chunked"], derived["paged_spls_chunked"]
+    rows.append(("serving/summary_chunked", 0.0, {
+        "peak_pages_dense_chunked": ck["pages_in_use_peak"],
+        "peak_pages_spls_chunked": cs["pages_in_use_peak"],
+        "page_reduction_x": round(ck["pages_in_use_peak"]
+                                  / max(cs["pages_in_use_peak"], 1), 2),
+        "req_per_mb_dense_chunked": ck["req_per_mb"],
+        "req_per_mb_spls_chunked": cs["req_per_mb"],
+        "tok_s_dense_chunked": ck["tok_s"],
+        "tok_s_spls_chunked": cs["tok_s"]}))
     return rows

@@ -30,24 +30,32 @@ def split_heads(x: jax.Array, n_heads: int) -> jax.Array:
 
 
 def predict_qk(x: jax.Array, wq: jax.Array, wk: jax.Array,
-               method: str = "hlog", bits: int = 8):
+               method: str = "hlog", bits: int = 8,
+               act_axis: Optional[int] = None):
     """Predict Q and K with log-domain quantized inputs and weights.
 
     Args:
       x:  (..., L, D) activations (float; int8-QAT values in the paper).
       wq, wk: (D, D_qk) projection weights.
+      act_axis: quantization-scale axis for the *activations* (and the
+        second-stage Q/K re-quantization).  ``None`` (default) keeps the
+        per-tensor scale; ``-1`` gives per-token scales, which makes every
+        row of the prediction independent of every other row -- required by
+        the streaming serving predictor, where tokens arrive one chunk at a
+        time and future rows must not influence already-emitted scales.
+        Weights always use per-tensor scales (they are static).
 
     Returns ``(q_pred, k_pred)`` of shape (..., L, D_qk), re-quantized to
     8-bit + projected again, ready for the score matmul -- this mirrors the
     "additional 8-bit quantization ... and the entire process is repeated"
     step of Sec. IV-B.
     """
-    xq = quantize_dequantize(x, method, bits)
+    xq = quantize_dequantize(x, method, bits, axis=act_axis)
     q_pred = xq @ quantize_dequantize(wq, method, bits)
     k_pred = xq @ quantize_dequantize(wk, method, bits)
     # second-stage quantization of the predicted Q/K
-    q_pred = quantize_dequantize(q_pred, method, bits)
-    k_pred = quantize_dequantize(k_pred, method, bits)
+    q_pred = quantize_dequantize(q_pred, method, bits, axis=act_axis)
+    k_pred = quantize_dequantize(k_pred, method, bits, axis=act_axis)
     return q_pred, k_pred
 
 

@@ -27,7 +27,7 @@ as derived in DESIGN.md §Hardware-adaptation.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +35,153 @@ import jax.numpy as jnp
 from .similarity import local_similarity
 from .topk import topk_count
 
-__all__ = ["ChunkedPlan", "chunked_plan_scan"]
+__all__ = ["CAUSAL_FILL", "ChunkedPlan", "ChunkPlanBlock", "plan_chunk",
+           "plan_chunk_votes", "bisect_topk_mask", "chunked_plan_scan",
+           "votes_from_kv_any"]
+
+# Causal / invalid-column fill for PAM blocks.  Must round-trip bfloat16
+# (bf16 max is ~3.39e38) and sit far below any real predicted score so the
+# bisection's lo-init can exclude it with a simple `< -1e29` test.
+CAUSAL_FILL = -3e38
+
+
+def bisect_topk_mask(pam32: jax.Array, k, n_iters: int = 12) -> jax.Array:
+    """Threshold-based row-wise top-k via bisection on the last axis.
+
+    GSPMD replicates both sort and scatter operands of an exact
+    ``lax.top_k`` (a 200 TB/device all-gather at 32k each), but counting
+    compares partitions perfectly.  ``n_iters`` halvings pin the k-th value
+    to ``range / 2^n_iters`` (<0.03% of the value range at the default 12);
+    a few tie entries more or less are harmless for column-keep and
+    similarity.  ``k`` may be a traced scalar (unlike exact top-k, whose k
+    must be static) -- this is what lets one serving jit cover every prompt
+    length.  Fill entries (``< -1e29``, e.g. :data:`CAUSAL_FILL`) never pass
+    the threshold and are excluded from the lo-init.
+    """
+    hi = pam32.max(-1, keepdims=True)
+    # range must span only *valid* entries: the causal fill value would
+    # otherwise eat every bisection step (-3e38 / 2^12 is still -7e34)
+    lo = jnp.min(jnp.where(pam32 < -1e29, hi, pam32), -1, keepdims=True)
+    for _ in range(n_iters):
+        mid = 0.5 * (lo + hi)
+        cnt = (pam32 >= mid).sum(-1, keepdims=True)
+        lo = jnp.where(cnt >= k, mid, lo)
+        hi = jnp.where(cnt >= k, hi, mid)
+    return pam32 >= lo
+
+
+class ChunkPlanBlock(NamedTuple):
+    """Plan for one row block of the PAM, over a (possibly padded) column
+    buffer of ``S`` slots.  Leading dims ``(B, KV', G')``; ``C`` rows.
+
+    This is the streaming unit the serving engine consumes: one of these is
+    produced per prefill chunk (O(C * S) memory -- never the full PAM), and
+    its ``kv_any`` contributions OR-accumulate across chunks into the
+    page-prune vote (:func:`votes_from_kv_any`).
+    """
+
+    mask: jax.Array          # (B, KV', G', C, S) bool intra-row SPA mask
+    q_critical: jax.Array    # (B, KV', G', C) bool
+    q_leader: jax.Array      # (B, KV', G', C) int32 *global* row ids
+    kv_any: jax.Array        # (B, KV', G', S) bool: this block's column OR
+    ffn_critical: jax.Array  # (B, C) bool
+    ffn_leader: jax.Array    # (B, C) int32 global row ids
+
+
+def _block_pam_mask(qh_blk: jax.Array, kh: jax.Array, *, k, row0,
+                    n_valid_rows, n_cols, causal: bool,
+                    scale: Optional[float]) -> Tuple[jax.Array, jax.Array]:
+    """Shared PAM-block -> top-k mask stage of :func:`plan_chunk` (also
+    used standalone by :func:`plan_chunk_votes`).  Returns
+    ``(mask (B,KV',G',C,S), pam32)``."""
+    Dh = qh_blk.shape[-1]
+    C = qh_blk.shape[-2]
+    S = kh.shape[-2]
+    scale = scale if scale is not None else Dh ** -0.5
+    # PAM block in bf16: the prediction is already 8-bit-quantized math, so
+    # bf16 storage halves plan-construction HBM traffic for free.
+    pam = (jnp.einsum("bkgqd,bkld->bkgql", qh_blk, kh) * scale
+           ).astype(jnp.bfloat16)
+    qi = row0 + jnp.arange(C)                       # global row positions
+    kj = jnp.arange(S)                              # column slot == position
+    cmask = kj[None, :] < n_cols
+    if causal:
+        cmask = cmask & (kj[None, :] <= qi[:, None])
+    pam = jnp.where(cmask, pam, jnp.asarray(CAUSAL_FILL, pam.dtype))
+    pam32 = pam.astype(jnp.float32)
+    valid_rows = (jnp.arange(C) < n_valid_rows)
+    mask = bisect_topk_mask(pam32, k) & cmask & valid_rows[:, None]
+    return mask, pam32
+
+
+def plan_chunk_votes(qh_blk: jax.Array, kh: jax.Array, *, k, row0,
+                     n_valid_rows, n_cols, causal: bool = True,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Column-keep contribution only: ``(B, KV', G', S)`` bool.
+
+    The page-prune vote needs just the zero-column detection, not the
+    similarity structure -- skipping the windowed-L1 stage keeps the vote
+    path's peak at the O(C * S) mask block (the pairwise-distance tensor
+    is O(heads * C * window * S), the largest intermediate of a full plan
+    block)."""
+    mask, _ = _block_pam_mask(qh_blk, kh, k=k, row0=row0,
+                              n_valid_rows=n_valid_rows, n_cols=n_cols,
+                              causal=causal, scale=scale)
+    return jnp.any(mask, axis=-2)
+
+
+def plan_chunk(qh_blk: jax.Array, kh: jax.Array, *, k, row0,
+               n_valid_rows, n_cols, s_threshold: float, window: int,
+               f_threshold: int, causal: bool = True,
+               scale: Optional[float] = None) -> ChunkPlanBlock:
+    """SPLS plan for a single row block -- the progressive-generation unit.
+
+    qh_blk: (B, KV', G', C, Dh) predicted q heads for rows
+    ``row0 .. row0+C``; kh: (B, KV', S, Dh) predicted k heads for every
+    column slot seen so far (slot index == original position in the
+    unpruned streaming layout).  ``k`` (top-k count), ``row0``,
+    ``n_valid_rows`` (real rows in this block; the tail may be padding) and
+    ``n_cols`` (valid columns) may all be traced scalars, so a single jit
+    of this function serves every prompt length and every chunk.
+
+    ``row0`` must be a multiple of ``window`` and C a window multiple: the
+    similarity windows are then exactly the windows the unchunked pipeline
+    would form, which is what makes the result independent of the chunking
+    (the paper's locality argument, pinned by the row-block invariance
+    tests).  Padded rows are never critical and never lead; padded/future
+    columns are filled with :data:`CAUSAL_FILL` and never voted for.
+    """
+    B, KVp, Gp, C, Dh = qh_blk.shape
+    S = kh.shape[-2]
+    mask, pam32 = _block_pam_mask(qh_blk, kh, k=k, row0=row0,
+                                  n_valid_rows=n_valid_rows, n_cols=n_cols,
+                                  causal=causal, scale=scale)
+    spa = jnp.where(mask, pam32, jnp.zeros_like(pam32))
+    sim = local_similarity(spa, window, s_threshold,
+                           valid_len=n_valid_rows)
+    leader = sim.leader + row0                      # block-local -> global
+    kv_any = jnp.any(mask, axis=-2)
+
+    from .mfi import mfi_ffn_sparsity
+    leaders_h = sim.leader.reshape(B, KVp * Gp, C)  # block-local for MFI
+    ffn = mfi_ffn_sparsity(leaders_h, window, f_threshold)
+    return ChunkPlanBlock(mask=mask, q_critical=sim.is_critical,
+                          q_leader=leader, kv_any=kv_any,
+                          ffn_critical=ffn.is_critical,
+                          ffn_leader=ffn.leader + row0)
+
+
+def votes_from_kv_any(kv_any: jax.Array) -> jax.Array:
+    """(B, KV', G', S) per-head column-keep bools -> (S,) head-vote counts.
+
+    The cross-chunk accumulator is a plain OR over blocks *per head* (a
+    head's "any row selected this column" can only turn True as more chunks
+    arrive), after which the vote is the head count -- summing per-block
+    votes instead would double-count heads across chunks.
+    """
+    B = kv_any.shape[0]
+    S = kv_any.shape[-1]
+    return kv_any.reshape(B, -1, S).sum(axis=1).astype(jnp.int32)[0]
 
 
 class ChunkedPlan(NamedTuple):
@@ -92,23 +238,11 @@ def chunked_plan_scan(qh: jax.Array, kh: jax.Array, *, k_ratio: float,
             qi = r0 + jnp.arange(row_block)
             kj = jnp.arange(L)
             cmask = kj[None, :] <= qi[:, None]
-            pam = jnp.where(cmask, pam, jnp.asarray(-3e38, pam.dtype))
-        # threshold-based top-k via bisection: GSPMD replicates both sort
-        # and scatter operands (a 200 TB/device all-gather at 32k each),
-        # but counting compares partitions perfectly.  8 iterations pin
-        # the k-th value to <1% of the value range; a few tie entries
-        # more or less are harmless for column-keep and similarity.
+            pam = jnp.where(cmask, pam, jnp.asarray(CAUSAL_FILL, pam.dtype))
+        # threshold-based top-k via bisection (12 iterations; see
+        # bisect_topk_mask for why counting beats exact top_k under GSPMD)
         pam32 = pam.astype(jnp.float32)
-        hi = pam32.max(-1, keepdims=True)
-        # range must span only *valid* entries: the causal fill value would
-        # otherwise eat every bisection step (-1e30 / 2^12 is still -2e26)
-        lo = jnp.min(jnp.where(pam32 < -1e29, hi, pam32), -1, keepdims=True)
-        for _ in range(12):
-            mid = 0.5 * (lo + hi)
-            cnt = (pam32 >= mid).sum(-1, keepdims=True)
-            lo = jnp.where(cnt >= k, mid, lo)
-            hi = jnp.where(cnt >= k, hi, mid)
-        mask = pam32 >= lo
+        mask = bisect_topk_mask(pam32, k)
         mask = constrain(mask, blk_names)
         if causal:
             mask = mask & cmask

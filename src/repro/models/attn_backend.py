@@ -69,6 +69,7 @@ sparsity mode -- see :func:`resolve_backend`.
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -85,6 +86,11 @@ __all__ = ["register_backend", "get_backend", "available_backends",
            "resolve_backend", "AUTO", "CHUNK_THRESHOLD", "KV_CHUNK"]
 
 AUTO = "auto"
+# Raise (instead of warn) when an explicitly configured backend has the
+# wrong kind for a call site; see resolve_backend.  The per-call `strict`
+# argument overrides this global default.
+STRICT_BACKEND_KIND = False
+_warned_kind_mismatch: set = set()
 # KV-chunked attention kicks in above this length (keeps scores << O(L^2))
 CHUNK_THRESHOLD = 8192
 KV_CHUNK = 2048
@@ -138,12 +144,23 @@ def _platform() -> str:
     return jax.default_backend()
 
 
+def _site_kind(decode: bool, paged: bool) -> str:
+    return ("paged decode" if paged else "decode") if decode else "forward"
+
+
 def resolve_backend(name: Optional[str], cfg, *, L: int, plan=None,
                     q_capacity: Optional[int] = None, decode: bool = False,
                     paged: bool = False,
-                    platform: Optional[str] = None) -> str:
+                    platform: Optional[str] = None,
+                    strict: Optional[bool] = None) -> str:
     """Map a configured backend name (possibly ``"auto"``/None) to a
     concrete registry key.
+
+    An explicitly configured name whose kind does not match the call site
+    (a forward name at a decode site, a dense decode name at a paged site,
+    ...) falls back to that site's auto choice with a ``RuntimeWarning``
+    (once per (name, site) pair), or raises when ``strict=True`` (per call)
+    or :data:`STRICT_BACKEND_KIND` is set globally.
 
     The ``"auto"`` heuristic (documented in models/README.md):
 
@@ -172,7 +189,19 @@ def resolve_backend(name: Optional[str], cfg, *, L: int, plan=None,
         # kind mismatch: the one config field drives every context, so a
         # name of the wrong kind for this site (forward at decode, dense
         # decode at a paged site, ...) falls through to the auto choice
-        # for this site instead of raising
+        # for this site -- loudly, so a typo'd override cannot silently
+        # serve through a different backend than the one asked for
+        site = _site_kind(decode, paged)
+        msg = (f"configured attention backend {name!r} is a "
+               f"{_site_kind(b.decode, b.paged)} backend but this is a "
+               f"{site} site; falling back to the auto choice for this "
+               f"site (pass strict=True or set "
+               f"repro.models.attn_backend.STRICT_BACKEND_KIND to raise)")
+        if strict if strict is not None else STRICT_BACKEND_KIND:
+            raise ValueError(msg)
+        if (name, site) not in _warned_kind_mismatch:
+            _warned_kind_mismatch.add((name, site))
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
     platform = platform or _platform()
     if decode and paged:
         return ("pallas_paged_decode" if platform == "tpu"

@@ -32,7 +32,8 @@ from .mamba import (MambaCache, init_mamba, init_mamba_cache, mamba_decode,
 from .moe import ffn_forward, init_ffn
 
 __all__ = ["init_block", "block_forward", "block_decode", "init_block_cache",
-           "build_block_plan"]
+           "build_block_plan", "build_block_plan_progressive",
+           "progressive_plan_blocks"]
 
 
 def init_block(cfg: ArchConfig, blk: BlockCfg, key: jax.Array, dtype) -> dict:
@@ -168,6 +169,119 @@ def build_block_plan_chunked(cfg: ArchConfig, p: dict, xn: jax.Array):
         head_names=head_names)
 
 
+def _progressive_row_block(L: int, w: int) -> int:
+    """Row-block size for the progressive planner: a window multiple, at
+    most ~512 rows (the PAM block is O(row_block * L) per head)."""
+    return max(w, (min(512, L) // w) * w)
+
+
+def progressive_plan_blocks(cfg: ArchConfig, p: dict, xn: jax.Array,
+                            row_block: Optional[int] = None,
+                            votes_only: bool = False):
+    """Iterate the progressive planner's row blocks for a full sequence.
+
+    The single place that owns the predicted-head layout (mirroring
+    :func:`head_shard_mode`), the window-aligned row blocking, and the
+    tail padding -- both the full plan assembly
+    (:func:`build_block_plan_progressive`) and the serving vote path
+    (``repro.serving.pager.spls_token_votes``) consume it, so the two can
+    never diverge.  Yields :class:`~repro.core.spls_chunked.ChunkPlanBlock`
+    per block, or just the ``kv_any`` column-keep bools with
+    ``votes_only=True`` (skipping the similarity stage, whose pairwise
+    tensor is the largest intermediate of a full block).
+    """
+    from repro.core.predict import predict_qk
+    from repro.core.spls_chunked import plan_chunk, plan_chunk_votes
+    from repro.core.topk import topk_count
+    from .attention import head_shard_mode
+
+    D, KV, Dh = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
+    G = cfg.n_heads // KV
+    B, L, _ = xn.shape
+    scfg = cfg.spls
+    mode = head_shard_mode(cfg)
+    wq = p["attn"]["wq"].reshape(D, KV * G * Dh)
+    wk = p["attn"]["wk"].reshape(D, KV * Dh)
+    qp, kp = predict_qk(xn, wq, wk, scfg.quant_method, scfg.quant_bits,
+                        act_axis=-1)
+    if mode == "flat":
+        H = KV * G
+        qh = qp.reshape(B, L, H, Dh).transpose(0, 2, 1, 3)[:, :, None]
+        kh = jnp.repeat(kp.reshape(B, L, KV, Dh).transpose(0, 2, 1, 3),
+                        G, axis=1)
+    else:
+        qh = qp.reshape(B, L, KV, G, Dh).transpose(0, 2, 3, 1, 4)
+        kh = kp.reshape(B, L, KV, Dh).transpose(0, 2, 1, 3)
+
+    w = scfg.window
+    rb = row_block or _progressive_row_block(L, w)
+    assert rb % w == 0, (rb, w)
+    nblk = -(-L // rb)
+    pad = nblk * rb - L
+    if pad:
+        qh = jnp.pad(qh, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+    k = topk_count(L, scfg.k_ratio)
+    for i in range(nblk):
+        common = dict(k=k, row0=i * rb, n_valid_rows=min(rb, L - i * rb),
+                      n_cols=L, causal=cfg.causal)
+        q_blk = qh[..., i * rb:(i + 1) * rb, :]
+        if votes_only:
+            yield plan_chunk_votes(q_blk, kh, **common)
+        else:
+            yield plan_chunk(q_blk, kh, s_threshold=scfg.s_threshold,
+                             window=w, f_threshold=scfg.f_threshold,
+                             **common)
+
+
+def build_block_plan_progressive(cfg: ArchConfig, p: dict, xn: jax.Array,
+                                 row_block: Optional[int] = None
+                                 ) -> Optional[SparsityPlan]:
+    """Serving-mode SPLS plan: the numerics a *streaming* predictor can
+    reproduce exactly, assembled over the full sequence.
+
+    Differs from :func:`build_block_plan` in exactly the two ways required
+    for chunk-by-chunk reproducibility (the serving engines run this for
+    full prefills and :func:`repro.core.spls_chunked.plan_chunk` per chunk;
+    both must agree bit-for-bit):
+
+      * **per-token quantization** (``act_axis=-1`` in ``predict_qk``):
+        per-tensor scales depend on rows that have not arrived yet in a
+        streaming prefill;
+      * **bisection top-k** over scanned row blocks (never the full PAM --
+        O(row_block * L) peak) with a threshold that is row-local, so any
+        window-aligned blocking yields the same plan.
+
+    Returns ``None`` when SPLS is disabled.
+    """
+    if not cfg.spls.enabled:
+        return None
+    B, L, _ = xn.shape
+    scfg = cfg.spls
+    blocks = list(progressive_plan_blocks(cfg, p, xn, row_block))
+
+    cat = lambda xs, ax: xs[0] if len(xs) == 1 else jnp.concatenate(xs, ax)
+    mask = cat([b.mask for b in blocks], -2)[..., :L, :]
+    q_crit = cat([b.q_critical for b in blocks], -1)[..., :L]
+    q_lead = cat([b.q_leader for b in blocks], -1)[..., :L]
+    kv_keep = blocks[0].kv_any
+    for b in blocks[1:]:
+        kv_keep = kv_keep | b.kv_any
+    if scfg.ffn_sparsity:
+        ffn_crit = cat([b.ffn_critical for b in blocks], -1)[..., :L]
+        ffn_lead = cat([b.ffn_leader for b in blocks], -1)[..., :L]
+    else:
+        ar = jnp.arange(L, dtype=jnp.int32)
+        ffn_crit = jnp.ones((B, L), bool)
+        ffn_lead = jnp.broadcast_to(ar, (B, L))
+    # attn_mask == mask & kv_keep[..., None, :] identically: any column a
+    # row's mask selects is by definition kept in that head, so the
+    # intersection is a no-op (this is also what makes simulation-mode
+    # execution reproducible row-locally by a streaming prefill).
+    return SparsityPlan(attn_mask=mask, q_critical=q_crit, q_leader=q_lead,
+                        kv_keep=kv_keep, ffn_critical=ffn_crit,
+                        ffn_leader=ffn_lead)
+
+
 _SPLS_CHUNK_THRESHOLD = 8192
 
 
@@ -182,12 +296,17 @@ def _capacities(cfg: ArchConfig, L: int) -> Tuple[Optional[int], Optional[int]]:
 
 def block_forward(cfg: ArchConfig, blk: BlockCfg, p: dict, x: jax.Array,
                   cache_len: Optional[int] = None,
-                  attn_backend: Optional[str] = None):
+                  attn_backend: Optional[str] = None,
+                  plan_mode: str = "auto"):
     """Full-sequence block.  x: (B, L, D).
 
     With ``cache_len`` (prefill) also returns the block's decode cache.
     ``attn_backend`` overrides ``cfg.attn_backend`` for the mixer (see
-    :mod:`repro.models.attn_backend`).
+    :mod:`repro.models.attn_backend`).  ``plan_mode="progressive"`` builds
+    the SPLS plan with :func:`build_block_plan_progressive` (streaming-
+    reproducible numerics -- the serving engines use this so chunked and
+    full prefills agree bit-for-bit); ``"auto"`` keeps the exact-top-k
+    builder, switching to the ChunkedPlan path at long L.
     """
     xn = rms_norm(x, p["ln1"], cfg.norm_eps)
     plan, cache = None, None
@@ -197,7 +316,9 @@ def block_forward(cfg: ArchConfig, blk: BlockCfg, p: dict, x: jax.Array,
         # SPLS plan layout would need garbage-head vote filtering -- noted
         # in DESIGN.md §Arch-applicability.
         if head_shard_mode(cfg) != "padded":
-            if cfg.spls.enabled and x.shape[1] >= _SPLS_CHUNK_THRESHOLD:
+            if plan_mode == "progressive":
+                plan = build_block_plan_progressive(cfg, p, xn)
+            elif cfg.spls.enabled and x.shape[1] >= _SPLS_CHUNK_THRESHOLD:
                 plan = build_block_plan_chunked(cfg, p, xn)
             else:
                 plan = build_block_plan(cfg, p, xn)

@@ -187,13 +187,16 @@ def decode_step(cfg: ArchConfig, params: Params, cache, tokens: jax.Array,
 
 
 def prefill(cfg: ArchConfig, params: Params, inputs: jax.Array,
-            max_len: Optional[int] = None):
+            max_len: Optional[int] = None, plan_mode: str = "auto"):
     """Process a full prompt, returning (logits, cache) for decoding.
 
     When SPLS is enabled this is exactly the paper's scenario: the sparsity
     plan is predicted per block before QKV generation and the prompt is
     processed sparsely; the KV cache still holds every position (pruned
     columns would be an additional paper-faithful saving -- see DESIGN.md).
+    ``plan_mode="progressive"`` selects the streaming-reproducible plan
+    builder (see :func:`repro.models.blocks.block_forward`); the serving
+    engines use it so chunked and whole-prompt prefills agree exactly.
     """
     L = inputs.shape[1]
     S = max_len or L
@@ -206,7 +209,8 @@ def prefill(cfg: ArchConfig, params: Params, inputs: jax.Array,
             if jnp.issubdtype(a.dtype, jnp.floating) else a, pparams)
         caches = []
         for blk, bp in zip(cfg.period, pparams):
-            x, c = block_forward(cfg, blk, bp, x, cache_len=S)
+            x, c = block_forward(cfg, blk, bp, x, cache_len=S,
+                                 plan_mode=plan_mode)
             caches.append(c)
         return x, tuple(caches)
 

@@ -8,16 +8,20 @@ page-pruning semantics.
 """
 
 from .pager import (NULL_PAGE, POS_SENTINEL, PagedKVCache, PagePool,
-                    init_paged_cache, init_pos_pages, spls_token_keep)
-from .paged_model import (paged_decode_step, paged_prefill_chunk,
+                    init_paged_cache, init_pos_pages, init_pred_cache,
+                    spls_token_keep, spls_token_votes)
+from .paged_model import (compact_slots, paged_decode_step,
+                          paged_prefill_chunk, paged_prefill_chunk_spls,
                           scatter_prefill)
 from .scheduler import Scheduler, SchedulerConfig, SeqState
 from .engine import PagedServingEngine, Request, ServeConfig, ServingEngine
 
 __all__ = [
     "NULL_PAGE", "POS_SENTINEL", "PagedKVCache", "PagePool",
-    "init_paged_cache", "init_pos_pages", "spls_token_keep",
-    "paged_decode_step", "paged_prefill_chunk", "scatter_prefill",
+    "init_paged_cache", "init_pos_pages", "init_pred_cache",
+    "spls_token_keep", "spls_token_votes",
+    "compact_slots", "paged_decode_step", "paged_prefill_chunk",
+    "paged_prefill_chunk_spls", "scatter_prefill",
     "Scheduler", "SchedulerConfig", "SeqState",
     "PagedServingEngine", "Request", "ServeConfig", "ServingEngine",
 ]

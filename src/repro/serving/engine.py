@@ -32,10 +32,12 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import decode_step, init_cache, prefill
+from repro.models.attn_backend import AUTO
 
 from .pager import (NULL_PAGE, PagePool, init_paged_cache, init_pos_pages,
-                    keep_from_votes, spls_token_votes)
-from .paged_model import (paged_decode_step, paged_prefill_chunk,
+                    init_pred_cache, keep_from_votes, spls_token_votes)
+from .paged_model import (compact_slots, paged_decode_step,
+                          paged_prefill_chunk, paged_prefill_chunk_spls,
                           scatter_prefill)
 from .scheduler import Scheduler, SchedulerConfig, SeqState
 
@@ -77,6 +79,24 @@ class ServeConfig:
     spls_prune_vote: float = 0.5    # head-vote fraction a column must win
 
 
+def _backend_for_site(name: Optional[str], *, decode: bool,
+                      paged: bool = False) -> Optional[str]:
+    """Route a ServeConfig.attn_backend name to one engine site.
+
+    The single config field intentionally drives every site an engine
+    has; a site of a different kind resolves ``"auto"``.  Doing the kind
+    split *here* keeps the registry's kind-mismatch warning reserved for
+    genuine configuration errors instead of firing on the engines' own
+    documented fall-through (and keeps ``STRICT_BACKEND_KIND`` usable
+    with the engines)."""
+    if name is None or name == AUTO:
+        return name
+    from repro.models import available_backends
+
+    return (name if name in available_backends(decode=decode, paged=paged)
+            else AUTO)
+
+
 def _sample_tokens(key: Optional[jax.Array], logits: jax.Array,
                    greedy: bool, temperature: float) -> jax.Array:
     """logits (..., V) -> (...,) int32 token ids."""
@@ -107,8 +127,12 @@ class _SamplerMixin:
 class ServingEngine(_SamplerMixin):
     def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig):
         assert cfg.input_mode == "tokens", "engine serves token models"
+        cfg_fwd, cfg_dec = cfg, cfg
         if scfg.attn_backend is not None:
-            cfg = dataclasses.replace(cfg, attn_backend=scfg.attn_backend)
+            cfg_fwd = dataclasses.replace(cfg, attn_backend=_backend_for_site(
+                scfg.attn_backend, decode=False))
+            cfg_dec = dataclasses.replace(cfg, attn_backend=_backend_for_site(
+                scfg.attn_backend, decode=True))
         self.cfg, self.params = cfg, params
         self._init_sampler(scfg)
         self.queue: deque = deque()
@@ -118,9 +142,14 @@ class ServingEngine(_SamplerMixin):
         self.cache = init_cache(cfg, scfg.n_slots, scfg.max_len)
         self._retired: List[Request] = []
         self._decode = jax.jit(
-            lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+            lambda p, c, t, pos: decode_step(cfg_dec, p, c, t, pos))
+        # SPLS configs prefill with the progressive (streaming-
+        # reproducible) plan builder so this engine stays the exact parity
+        # oracle for the paged engine's chunked SPLS prefill
+        plan_mode = "progressive" if cfg.spls.enabled else "auto"
         self._prefill = jax.jit(
-            lambda p, toks: prefill(cfg, p, toks, max_len=scfg.max_len))
+            lambda p, toks: prefill(cfg_fwd, p, toks, max_len=scfg.max_len,
+                                    plan_mode=plan_mode))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -198,8 +227,12 @@ class PagedServingEngine(_SamplerMixin):
         assert cfg.input_mode == "tokens", "engine serves token models"
         assert all(b.mixer == "attn" for b in cfg.period), \
             "paged engine is attention-only (SSM state is O(1) per slot)"
+        cfg_fwd, cfg_pgd = cfg, cfg
         if scfg.attn_backend is not None:
-            cfg = dataclasses.replace(cfg, attn_backend=scfg.attn_backend)
+            cfg_fwd = dataclasses.replace(cfg, attn_backend=_backend_for_site(
+                scfg.attn_backend, decode=False))
+            cfg_pgd = dataclasses.replace(cfg, attn_backend=_backend_for_site(
+                scfg.attn_backend, decode=True, paged=True))
         self.cfg, self.params = cfg, params
         self._init_sampler(scfg)
 
@@ -209,33 +242,60 @@ class PagedServingEngine(_SamplerMixin):
         n_pages = (scfg.n_pages if scfg.n_pages is not None
                    else scfg.n_slots * self.pages_per_seq + 1)
         self.pool = PagePool(n_pages, ps)
-        # chunked prefill needs causal cross-chunk attention and bypasses
-        # the (full-sequence) SPLS plan -> SPLS configs always prefill whole
-        chunkable = cfg.causal and not cfg.spls.enabled
+        self._prune = cfg.spls.enabled and scfg.spls_page_prune
+        # chunked prefill needs causal cross-chunk attention.  SPLS no
+        # longer disables it: the plan streams one window-aligned chunk at
+        # a time (the paper's progressive generation scheme) and the
+        # page-prune vote accumulates across chunks.
+        chunkable = cfg.causal
+        if cfg.spls.enabled and chunkable \
+                and scfg.prefill_chunk % cfg.spls.window:
+            raise ValueError(
+                f"prefill_chunk ({scfg.prefill_chunk}) must be a multiple "
+                f"of the SPLS similarity window ({cfg.spls.window}): "
+                f"chunk boundaries must align with similarity windows for "
+                f"chunked prefill to reproduce the full-prefill plan")
         self.sched = Scheduler(
             SchedulerConfig(n_slots=scfg.n_slots,
                             prefill_chunk=scfg.prefill_chunk,
                             max_prefills_per_tick=scfg.max_prefills_per_tick,
                             watermark=scfg.watermark),
-            self.pool, scfg.max_len, chunkable=chunkable)
-        self._prune = cfg.spls.enabled and scfg.spls_page_prune
+            self.pool, scfg.max_len, chunkable=chunkable,
+            prune_aware=self._prune)
 
         self.cache = init_paged_cache(cfg, n_pages, ps)
         self.pos_pages = init_pos_pages(n_pages, ps)
+        # the paged SPLS predictor cache is allocated lazily on the first
+        # chunked SPLS prefill: full-prefill-only workloads (every prompt
+        # <= prefill_chunk) never pay its pool memory
+        self.pred_cache = None
+        self._n_pages = n_pages
         self._retired: List[Request] = []
         # the old cache / pos_pages references die on reassignment every
         # tick, so donate them: decode scatters one token in place instead
         # of copying the whole page pool (donation is a no-op on CPU)
         self._decode = jax.jit(
             lambda p, c, pp, tb, kl, cp, t: paged_decode_step(
-                cfg, p, c, pp, tb, kl, cp, t), donate_argnums=(1, 2))
-        self._prefill = jax.jit(lambda p, toks: prefill(cfg, p, toks))
+                cfg_pgd, p, c, pp, tb, kl, cp, t), donate_argnums=(1, 2))
+        plan_mode = "progressive" if cfg.spls.enabled else "auto"
+        self._prefill = jax.jit(
+            lambda p, toks: prefill(cfg_fwd, p, toks, plan_mode=plan_mode))
         self._votes = jax.jit(
             lambda p, toks: spls_token_votes(cfg, p, toks))
         self._chunk = jax.jit(
             lambda p, c, pp, tb, start, toks, valid: paged_prefill_chunk(
                 cfg, p, c, pp, tb, start, toks, valid),
             donate_argnums=(1, 2))
+        # SPLS chunk step: one jit for *all* prompt lengths (top-k count,
+        # start, and valid ride in as traced scalars)
+        self._chunk_spls = jax.jit(
+            lambda p, c, pc, pp, tb, start, toks, valid, k:
+            paged_prefill_chunk_spls(cfg, p, c, pc, pp, tb, start, toks,
+                                     valid, k),
+            donate_argnums=(1, 2, 3))
+        self._compact = jax.jit(
+            lambda c, pp, tb, keep: compact_slots(c, pp, tb, keep),
+            donate_argnums=(0, 1))
 
     # ------------------------------------------------------------------
     @property
@@ -286,27 +346,77 @@ class PagedServingEngine(_SamplerMixin):
         st.kv_len = n_kept
         st.cur_pos = st.prompt_len
         st.prefilled = st.prompt_len
+        if self._prune:
+            self.sched.note_prune(st.prompt_len, n_kept)
         self._emit_first(st, logits[0, -1])
 
     def _chunk_prefill(self, st: SeqState) -> None:
         cs = self.sched.cfg.prefill_chunk
-        start = st.prefilled                 # == st.kv_len (no pruning here)
+        start = st.prefilled                 # == st.kv_len (columns stay
+        #                          dense until the end-of-prefill compaction)
         valid = min(cs, st.prompt_len - start)
         if not self.sched.grow_to(st, start + valid):
             return
         chunk = np.zeros((cs,), np.int32)
         chunk[:valid] = st.tokens[start:start + valid]
-        logits, self.cache, self.pos_pages = self._chunk(
-            self.params, self.cache, self.pos_pages,
-            jnp.asarray(self._table_row(st)),
-            jnp.asarray(start, jnp.int32), jnp.asarray(chunk)[None, :],
-            jnp.asarray(valid, jnp.int32))
+        if self.cfg.spls.enabled:
+            from repro.core.topk import topk_count
+            if self.pred_cache is None:
+                self.pred_cache = init_pred_cache(self.cfg, self._n_pages,
+                                                  self.page_size)
+            k = topk_count(st.prompt_len, self.cfg.spls.k_ratio)
+            (logits, self.cache, self.pred_cache, self.pos_pages,
+             kv_any) = self._chunk_spls(
+                self.params, self.cache, self.pred_cache, self.pos_pages,
+                jnp.asarray(self._table_row(st)),
+                jnp.asarray(start, jnp.int32), jnp.asarray(chunk)[None, :],
+                jnp.asarray(valid, jnp.int32), jnp.asarray(k, jnp.int32))
+            if self._prune:
+                # cross-chunk vote accumulator: a head's "some row kept
+                # this column" bit only ever turns on, so OR is exact
+                votes = np.asarray(kv_any).reshape(self.cfg.n_heads, -1)
+                st.head_votes = (votes if st.head_votes is None
+                                 else st.head_votes | votes)
+        else:
+            logits, self.cache, self.pos_pages = self._chunk(
+                self.params, self.cache, self.pos_pages,
+                jnp.asarray(self._table_row(st)),
+                jnp.asarray(start, jnp.int32), jnp.asarray(chunk)[None, :],
+                jnp.asarray(valid, jnp.int32))
         st.prefilled += valid
         st.kv_len += valid
         st.cur_pos += valid
         self.sched.stats["prefill_chunks"] += 1
         if st.phase == "decode":
+            if self._prune and self.cfg.spls.enabled:
+                self._finish_chunk_prune(st)
             self._emit_first(st, logits[0, 0])
+
+    def _finish_chunk_prune(self, st: SeqState) -> None:
+        """The page-prune vote is final once every prompt row has voted
+        (votes are monotone in rows, so pruning any earlier would diverge
+        from the full-prefill decision): threshold the accumulated head
+        votes, compact kept columns -- in original order, the same layout
+        ``scatter_prefill`` produces -- into the front of the sequence's
+        own pages, and free the tail."""
+        Lp = st.prompt_len
+        S = self.pages_per_seq * self.page_size
+        votes = st.head_votes.sum(axis=0).astype(np.int32)
+        keep = keep_from_votes(votes[:Lp], self.cfg.n_heads,
+                               self.scfg.spls_prune_vote)
+        n_kept = int(keep.sum())
+        keep_slots = np.zeros((S,), bool)
+        keep_slots[:Lp] = keep
+        self.cache, self.pos_pages = self._compact(
+            self.cache, self.pos_pages, jnp.asarray(self._table_row(st)),
+            jnp.asarray(keep_slots))
+        needed = self.pool.pages_for(n_kept)
+        if needed < len(st.pages):
+            self.pool.free(st.pages[needed:])
+            st.pages = st.pages[:needed]
+        st.kv_len = n_kept
+        st.head_votes = None
+        self.sched.note_prune(Lp, n_kept)
 
     def _emit_first(self, st: SeqState, logits_row: jax.Array) -> None:
         tok = int(self._pick(logits_row))
@@ -364,6 +474,12 @@ class PagedServingEngine(_SamplerMixin):
         return n_decoded
 
     def _retire_finished(self) -> None:
+        # requests the scheduler aborted (optimistic admission that never
+        # fit; see Scheduler.grow_to) retire with whatever they generated
+        for req in self.sched.aborted:
+            req.done = True
+            self._retired.append(req)
+        self.sched.aborted.clear()
         for st in list(self.sched.active()):
             req = st.req
             hit_eos = req.eos_id is not None and req.eos_id in req.output

@@ -36,9 +36,10 @@ from repro.models.common import dtype_of, rms_norm, softcap as _softcap
 from repro.models.model import embed_inputs, head_logits
 from repro.models.moe import ffn_forward
 
-from .pager import PagedKVCache
+from .pager import POS_SENTINEL, PagedKVCache
 
-__all__ = ["paged_decode_step", "paged_prefill_chunk", "scatter_prefill"]
+__all__ = ["paged_decode_step", "paged_prefill_chunk",
+           "paged_prefill_chunk_spls", "scatter_prefill", "compact_slots"]
 
 
 def _cast_params(pparams, dtype):
@@ -65,6 +66,57 @@ def _decode_flat_slots(tables: jax.Array, kv_len: jax.Array,
     page = jnp.take_along_axis(tables, (kv_len // page_size)[:, None],
                                axis=1)[:, 0]
     return page * page_size + kv_len % page_size
+
+
+def _chunk_slots(table: jax.Array, pos_pages: jax.Array, start: jax.Array,
+                 valid: jax.Array, CS: int):
+    """Chunk destination slots + pos_pages update, shared by both chunked
+    prefill paths (slot == original position during prefill).
+
+    Padded rows (idx >= valid) all scatter to null-page slot 0 and write
+    POS_SENTINEL -- not their would-be position -- so the null page stays
+    inert: a real id there could pass a ``pos - id < window`` test on a
+    row that reads the null page through an unallocated table entry.
+    Returns ``(sl (CS,) slot ids, flat (CS,) scatter targets,
+    new_pos_pages)``.
+    """
+    N, ps = pos_pages.shape
+    idx = jnp.arange(CS, dtype=jnp.int32)
+    sl = start + idx
+    page = table[sl // ps]
+    flat = jnp.where(idx < valid, page * ps + sl % ps, 0)
+    pos_pages = pos_pages.reshape(N * ps).at[flat].set(
+        jnp.where(idx < valid, sl, POS_SENTINEL)).reshape(N, ps)
+    return sl, flat, pos_pages
+
+
+def _write_chunk_kv(kc: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
+                    flat: jax.Array) -> PagedKVCache:
+    """Scatter a chunk's K/V rows (1, KV, CS, Dh) into flat page slots."""
+    KV, N, ps, Dh = kc.k_pages.shape
+    kf = kc.k_pages.reshape(KV, N * ps, Dh).at[:, flat].set(k_new[0])
+    vf = kc.v_pages.reshape(KV, N * ps, Dh).at[:, flat].set(v_new[0])
+    return PagedKVCache(kf.reshape(KV, N, ps, Dh), vf.reshape(KV, N, ps, Dh))
+
+
+def _residual_ffn(cfg: ArchConfig, blk, bp, x: jax.Array, h: jax.Array,
+                  ffn_leader: jax.Array = None) -> jax.Array:
+    """Attention residual + optional post-norms + FFN residual, shared by
+    the decode and chunked-prefill scan bodies.  ``ffn_leader`` (local row
+    ids) enables simulation-mode sparse FFN: similar tokens copy their MFI
+    leader's output."""
+    if cfg.use_post_norm:
+        h = rms_norm(h, bp["post_ln1"], cfg.norm_eps)
+    x = x + h
+    if blk.has_ffn:
+        xn2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        h2 = ffn_forward(cfg, blk.use_moe, bp["ffn"], xn2)
+        if ffn_leader is not None:
+            h2 = jnp.take_along_axis(h2, ffn_leader[..., None], axis=-2)
+        if cfg.use_post_norm:
+            h2 = rms_norm(h2, bp["post_ln2"], cfg.norm_eps)
+        x = x + h2
+    return x
 
 
 # ---------------------------------------------------------------------------
@@ -108,15 +160,7 @@ def paged_decode_step(cfg: ArchConfig, params, cache, pos_pages: jax.Array,
                    pos_pages=pos_pages, tables=tables, kv_len=n_valid,
                    pos=cur_pos, window=blk.window)
             h = output_proj(cfg, bp["attn"], o[:, :, :, None], "structured")
-            if cfg.use_post_norm:
-                h = rms_norm(h, bp["post_ln1"], cfg.norm_eps)
-            x = x + h
-            if blk.has_ffn:
-                xn2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
-                h2 = ffn_forward(cfg, blk.use_moe, bp["ffn"], xn2)
-                if cfg.use_post_norm:
-                    h2 = rms_norm(h2, bp["post_ln2"], cfg.norm_eps)
-                x = x + h2
+            x = _residual_ffn(cfg, blk, bp, x, h)
             new_caches.append(kc)
         return x, tuple(new_caches)
 
@@ -152,12 +196,8 @@ def paged_prefill_chunk(cfg: ArchConfig, params, cache,
     S = table.shape[0] * ps
     dtype = dtype_of(cfg.compute_dtype)
 
-    idx = jnp.arange(CS, dtype=jnp.int32)
-    sl = start + idx                                   # destination slots
-    page = table[sl // ps]
-    flat = jnp.where(idx < valid, page * ps + sl % ps, 0)
-    positions = (start + idx)[None, :]                 # original ids
-    pos_pages = pos_pages.reshape(N * ps).at[flat].set(sl).reshape(N, ps)
+    sl, flat, pos_pages = _chunk_slots(table, pos_pages, start, valid, CS)
+    positions = sl[None, :]                            # original ids
     n_valid = start + valid
     pg = pos_pages[table].reshape(S)                   # slot -> original id
     slot_idx = jnp.arange(S)
@@ -187,30 +227,166 @@ def paged_prefill_chunk(cfg: ArchConfig, params, cache,
             xn = rms_norm(x, bp["ln1"], cfg.norm_eps)
             q, k_new, v_new = project_qkv(cfg, bp["attn"], xn, positions,
                                           "structured")
-            KV, N_, ps_, Dh = kc.k_pages.shape
-            kf = kc.k_pages.reshape(KV, N_ * ps_, Dh).at[:, flat] \
-                .set(k_new[0])
-            vf = kc.v_pages.reshape(KV, N_ * ps_, Dh).at[:, flat] \
-                .set(v_new[0])
-            kc = PagedKVCache(kf.reshape(KV, N_, ps_, Dh),
-                              vf.reshape(KV, N_, ps_, Dh))
+            kc = _write_chunk_kv(kc, k_new, v_new, flat)
             o = attend(blk, q, kc)
             h = output_proj(cfg, bp["attn"], o, "structured")
-            if cfg.use_post_norm:
-                h = rms_norm(h, bp["post_ln1"], cfg.norm_eps)
-            x = x + h
-            if blk.has_ffn:
-                xn2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
-                h2 = ffn_forward(cfg, blk.use_moe, bp["ffn"], xn2)
-                if cfg.use_post_norm:
-                    h2 = rms_norm(h2, bp["post_ln2"], cfg.norm_eps)
-                x = x + h2
+            x = _residual_ffn(cfg, blk, bp, x, h)
             new_caches.append(kc)
         return x, tuple(new_caches)
 
     x, new_cache = jax.lax.scan(scan_body, x, (params["periods"], cache))
     x_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
     return head_logits(cfg, params, x_last), new_cache, pos_pages
+
+
+# ---------------------------------------------------------------------------
+# SPLS chunked prefill (the paper's progressive generation scheme, Sec. IV-C)
+# ---------------------------------------------------------------------------
+
+def paged_prefill_chunk_spls(cfg: ArchConfig, params, cache, pred_cache,
+                             pos_pages: jax.Array, table: jax.Array,
+                             start: jax.Array, tokens: jax.Array,
+                             valid: jax.Array, topk_k: jax.Array):
+    """One SPLS prompt chunk for a single sequence (B = 1).
+
+    The streaming realization of the progressive generation scheme: every
+    layer (1) extends its paged *predictor* cache with the chunk's
+    HLog-predicted K heads, (2) builds a plan block for the chunk's rows
+    against every column seen so far (:func:`plan_chunk`: bisection top-k
+    with a *traced* ``topk_k = ceil(k_ratio * Lp)``, so one jit covers
+    every prompt length; O(chunk * S) memory, never a full PAM), and
+    (3) executes the chunk rows in simulation-mode SPLS -- leader-row
+    recovery plus the intra-row mask -- over all written KV slots.  The
+    math is row-for-row identical to the progressive full-prefill path
+    (``prefill(..., plan_mode="progressive")``), which is what makes
+    chunked and whole-prompt serving agree bit-for-bit.
+
+    Chunks must be window-aligned (``start`` and the chunk size multiples
+    of ``cfg.spls.window``) so similarity windows coincide with the
+    unchunked pipeline's.  Columns are *not* pruned here -- the cross-head
+    page-prune vote only finalizes with the last chunk (votes are monotone
+    in rows), after which the engine runs :func:`compact_slots`.
+
+    Returns ``(logits (1, 1, V), new_cache, new_pred_cache, new_pos_pages,
+    kv_any)`` with ``kv_any (1, KV, G, S)`` layer 0's per-head column-keep
+    contribution for the engine's vote accumulator.
+    """
+    assert cfg.causal, "chunked prefill needs causal attention"
+    from repro.core.predict import predict_qk
+    from repro.core.sparse_exec import _masked_softmax, gather_rows
+    from repro.core.spls_chunked import plan_chunk
+
+    _, CS = tokens.shape
+    N, ps = pos_pages.shape
+    S = table.shape[0] * ps
+    D, KV, Dh = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
+    G = cfg.n_heads // KV
+    scfg = cfg.spls
+    dtype = dtype_of(cfg.compute_dtype)
+
+    sl, flat, pos_pages = _chunk_slots(table, pos_pages, start, valid, CS)
+    positions = sl[None, :]
+    n_valid = start + valid
+    slot_idx = jnp.arange(S)
+
+    x = embed_inputs(cfg, params, tokens)
+
+    def scan_body(x, inp):
+        pparams, pcache, ppred = inp
+        pparams = _cast_params(pparams, dtype)
+        new_caches, new_preds = [], []
+        kv_any0 = None
+        for blk, bp, kc, pk in zip(cfg.period, pparams, pcache, ppred):
+            xn = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            # -- prediction: extend the predictor pages, plan this block
+            wq2 = bp["attn"]["wq"].reshape(D, KV * G * Dh)
+            wk2 = bp["attn"]["wk"].reshape(D, KV * Dh)
+            qp, kp = predict_qk(xn, wq2, wk2, scfg.quant_method,
+                                scfg.quant_bits, act_axis=-1)
+            kp_h = kp.reshape(CS, KV, Dh).transpose(1, 0, 2)  # (KV, CS, Dh)
+            pk = pk.reshape(KV, N * ps, Dh).at[:, flat].set(kp_h) \
+                .reshape(KV, N, ps, Dh)
+            kh_all = pk[:, table].reshape(KV, S, Dh)[None]
+            qh = qp.reshape(1, CS, KV, G, Dh).transpose(0, 2, 3, 1, 4)
+            pb = plan_chunk(qh, kh_all, k=topk_k, row0=start,
+                            n_valid_rows=valid, n_cols=n_valid,
+                            s_threshold=scfg.s_threshold,
+                            window=scfg.window,
+                            f_threshold=scfg.f_threshold, causal=True)
+            if kv_any0 is None:
+                kv_any0 = pb.kv_any
+            # -- formal QKV at original positions; write into pages
+            q, k_new, v_new = project_qkv(cfg, bp["attn"], xn, positions,
+                                          "structured")
+            kc = _write_chunk_kv(kc, k_new, v_new, flat)
+            # -- simulation-mode SPLS attention over all written slots:
+            # similar rows use their leader's Q row and mask row (leaders
+            # are window-local, hence chunk-local)
+            kg = kc.k_pages[:, table][None].reshape(1, KV, S, Dh)
+            vg = kc.v_pages[:, table][None].reshape(1, KV, S, Dh)
+            mask = pb.mask
+            if blk.window is not None:
+                mask = mask & (positions[0][:, None] - slot_idx[None, :]
+                               < blk.window)
+            lead_local = pb.q_leader - start
+            q_eff = gather_rows(q, lead_local)
+            mask_eff = jnp.take_along_axis(mask, lead_local[..., None],
+                                           axis=-2)
+            s = jnp.einsum("bkgqd,bkld->bkgql", q_eff, kg) * (Dh ** -0.5)
+            if cfg.attn_softcap is not None:
+                s = jnp.tanh(s / cfg.attn_softcap) * cfg.attn_softcap
+            a = _masked_softmax(s, mask_eff)
+            o = jnp.einsum("bkgql,bkld->bkgqd", a, vg)
+            h = output_proj(cfg, bp["attn"], o, "structured")
+            x = _residual_ffn(cfg, blk, bp, x, h,
+                              ffn_leader=(pb.ffn_leader - start
+                                          if scfg.ffn_sparsity else None))
+            new_caches.append(kc)
+            new_preds.append(pk)
+        return x, (tuple(new_caches), tuple(new_preds), kv_any0)
+
+    x, (new_cache, new_pred, kv_any) = jax.lax.scan(
+        scan_body, x, (params["periods"], cache, pred_cache))
+    x_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
+    return (head_logits(cfg, params, x_last), new_cache, new_pred,
+            pos_pages, jax.tree.map(lambda a: a[0], kv_any))
+
+
+def compact_slots(cache, pos_pages: jax.Array, table: jax.Array,
+                  keep: jax.Array) -> Tuple[tuple, jax.Array]:
+    """End-of-prefill SPLS compaction, in place within a sequence's pages.
+
+    keep: (S,) bool over the sequence's logical slots (slot == original
+    position during prefill; slots past the prompt are False).  Kept
+    slots move -- in original order, matching :func:`scatter_prefill`'s
+    compacted layout exactly -- to the first ``n_kept`` slots of the
+    sequence's *own* pages; the freed tail is sentinel-filled so window
+    masks never admit a stale id.  No transient page allocation: the
+    engine frees the pages past ``ceil(n_kept / ps)`` afterwards.
+    """
+    N, ps = pos_pages.shape
+    S = table.shape[0] * ps
+    sl = jnp.arange(S)
+    flat = table[sl // ps] * ps + sl % ps
+    perm = jnp.argsort(~keep, stable=True)
+    n_kept = keep.sum()
+    src = flat[perm]
+    pos_flat = pos_pages.reshape(N * ps)
+    # unallocated table tails alias null-page slots: every such collision
+    # writes POS_SENTINEL (j >= n_kept), so the scatter stays deterministic
+    vals = jnp.where(sl < n_kept, pos_flat[src], POS_SENTINEL)
+    pos_pages = pos_flat.at[flat].set(vals).reshape(N, ps)
+
+    new_blocks = []
+    for pc in cache:
+        nP, KV, N_, ps_, Dh = pc.k_pages.shape
+        kf = pc.k_pages.reshape(nP, KV, N_ * ps_, Dh)
+        vf = pc.v_pages.reshape(nP, KV, N_ * ps_, Dh)
+        kf = kf.at[:, :, flat].set(kf[:, :, src])
+        vf = vf.at[:, :, flat].set(vf[:, :, src])
+        new_blocks.append(PagedKVCache(kf.reshape(nP, KV, N_, ps_, Dh),
+                                       vf.reshape(nP, KV, N_, ps_, Dh)))
+    return tuple(new_blocks), pos_pages
 
 
 # ---------------------------------------------------------------------------

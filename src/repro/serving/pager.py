@@ -33,8 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["NULL_PAGE", "POS_SENTINEL", "PagedKVCache", "PagePool",
-           "init_paged_cache", "init_pos_pages", "keep_from_votes",
-           "spls_token_keep", "spls_token_votes"]
+           "init_paged_cache", "init_pos_pages", "init_pred_cache",
+           "keep_from_votes", "spls_token_keep", "spls_token_votes"]
 
 NULL_PAGE = 0
 # pos_pages filler for never-written slots.  Correctness never rests on it:
@@ -68,6 +68,7 @@ class PagePool:
         self.n_pages = n_pages
         self.page_size = page_size
         self._free: deque = deque(range(1, n_pages))
+        self._allocated: set = set()
         self.peak_in_use = 0
 
     # ------------------------------------------------------------------
@@ -93,12 +94,26 @@ class PagePool:
         if n > len(self._free):
             return None
         pages = [self._free.popleft() for _ in range(n)]
+        self._allocated.update(pages)
         self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
         return pages
 
     def free(self, pages: List[int]) -> None:
+        """Return pages to the free list.
+
+        Raises on a double-free or a foreign/null page: a page id freed
+        twice would sit on the free list twice, get handed to *two*
+        sequences, and silently cross-contaminate their KV -- the classic
+        allocator bug, caught here instead of as corrupted generations.
+        """
         for p in pages:
-            assert p != NULL_PAGE, "null page is not allocatable"
+            if p not in self._allocated:
+                raise ValueError(
+                    f"page {p} is not currently allocated "
+                    f"({'null page' if p == NULL_PAGE else 'double-free or foreign page'}); "
+                    f"refusing to free it twice -- two sequences would "
+                    f"share one page")
+            self._allocated.discard(p)
             self._free.append(p)
 
 
@@ -137,6 +152,31 @@ def init_pos_pages(n_pages: int, page_size: int) -> jax.Array:
     return jnp.full((n_pages, page_size), POS_SENTINEL, jnp.int32)
 
 
+def init_pred_cache(cfg, n_pages: int, page_size: int):
+    """Paged SPLS predictor cache: per attention block, the HLog-predicted
+    K heads of every written slot -- one ``(n_periods, KV, n_pages, ps,
+    Dh)`` array per period block, page-parallel with the KV pool (same
+    block table, same flat slots).
+
+    This is what makes chunked prefill's per-chunk plan construction
+    O(chunk * L): each chunk's plan block scores the chunk's predicted Q
+    rows against *every previously seen column's* predicted K without
+    recomputing earlier chunks.  Only allocated when SPLS is enabled
+    (costs one extra K-sized array per layer, ~+50% pool bytes; an int8
+    code layout would cut that to +12.5% -- future work).
+    """
+    from repro.models.common import dtype_of
+
+    dtype = dtype_of(cfg.compute_dtype)
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def one_block(blk):
+        assert blk.mixer == "attn", "paged cache covers attention blocks only"
+        return jnp.zeros((cfg.n_periods, KV, n_pages, page_size, Dh), dtype)
+
+    return tuple(one_block(blk) for blk in cfg.period)
+
+
 # ---------------------------------------------------------------------------
 # SPLS page pruning policy
 # ---------------------------------------------------------------------------
@@ -144,23 +184,33 @@ def init_pos_pages(n_pages: int, page_size: int) -> jax.Array:
 def spls_token_votes(cfg, params, prompt: jax.Array) -> jax.Array:
     """(Lp,) int32 head votes for keeping each prompt KV column.
 
-    Runs the paper's SPLS prediction (HLog PAM -> top-k -> zero-column
-    detection) on the layer-0 normalized input and counts how many of the
-    H = KV*G heads retain each column.  Pure and jit-safe -- the engine
-    jits it once per prompt shape (alongside the per-shape prefill jit).
+    Runs the paper's SPLS prediction (HLog PAM -> bisection top-k ->
+    zero-column detection) on the layer-0 normalized input and counts how
+    many of the H = KV*G heads retain each column.  Routed through the
+    *progressive* planner (:func:`repro.core.spls_chunked.plan_chunk` over
+    window-aligned row blocks, per-token quantization): peak memory is
+    O(row_block * Lp) -- the dense O(Lp^2) plan is never materialized --
+    and the votes are bit-identical to what the streaming chunked-prefill
+    predictor accumulates chunk by chunk, for any chunking.  Pure and
+    jit-safe; the engine jits it once per prompt shape.
     """
-    from repro.models.blocks import build_block_plan
+    from repro.core.spls_chunked import votes_from_kv_any
+    from repro.models.blocks import progressive_plan_blocks
     from repro.models.common import dtype_of, rms_norm
 
-    Lp = prompt.shape[0]
-    blk0_params = jax.tree.map(lambda a: a[0], params["periods"][0])
     dtype = dtype_of(cfg.compute_dtype)
+    blk0 = jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, jax.tree.map(lambda a: a[0], params["periods"][0]))
     x = params["embed"][prompt[None, :]].astype(dtype)
     if cfg.scale_embedding:
         x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
-    xn = rms_norm(x, blk0_params["ln1"], cfg.norm_eps)
-    plan = build_block_plan(cfg, blk0_params, xn)
-    return plan.kv_keep[0].reshape(-1, Lp).sum(axis=0).astype(jnp.int32)
+    xn = rms_norm(x, blk0["ln1"], cfg.norm_eps)
+
+    kv_any = None
+    for blk in progressive_plan_blocks(cfg, blk0, xn, votes_only=True):
+        kv_any = blk if kv_any is None else (kv_any | blk)
+    return votes_from_kv_any(kv_any)
 
 
 def keep_from_votes(votes: np.ndarray, n_heads: int,

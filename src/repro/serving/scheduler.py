@@ -9,7 +9,10 @@ engine executes whatever the scheduler decides.  The dataflow per tick:
 2. **prefill** -- at most ``max_prefills_per_tick`` prefill-phase sequences
    advance by one prompt chunk.  Decode never waits for a whole prompt:
    a 10k-token prefill is sliced into ``prefill_chunk``-token pieces
-   interleaved with decode ticks (no head-of-line blocking).
+   interleaved with decode ticks (no head-of-line blocking).  With SPLS
+   the chunk also carries its slice of the progressive sparsity plan; the
+   page-prune vote finalizes with the last chunk, after which the engine
+   compacts kept columns and the freed pages come back here.
 3. **decode** -- every decode-phase sequence produces one token.  Crossing
    a page boundary allocates a page on demand; when the pool is dry the
    youngest other sequence is **preempted by page eviction**: its pages go
@@ -27,6 +30,7 @@ pool are rejected at submit: they could never run.
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import List, Optional
 
@@ -41,6 +45,10 @@ class SchedulerConfig:
     prefill_chunk: int = 64        # prompt tokens advanced per prefill tick
     max_prefills_per_tick: int = 1  # chunked-prefill fairness knob
     watermark: int = 0              # free pages held back at admission
+    # post-prune estimate smoothing (prune-aware page accounting) and the
+    # abort guard for optimistically admitted requests that can never fit
+    prune_ema: float = 0.5
+    max_solo_preemptions: int = 3
 
 
 @dataclasses.dataclass
@@ -58,6 +66,8 @@ class SeqState:
     kv_len: int = 0                # page slots written
     cur_pos: int = 0               # next original position
     prefilled: int = 0             # prompt tokens processed
+    head_votes: Optional[object] = None  # (H, S) bool cross-chunk SPLS
+    #                                      column-keep accumulator
 
     @property
     def prompt_len(self) -> int:
@@ -70,27 +80,68 @@ class SeqState:
 
 class Scheduler:
     def __init__(self, cfg: SchedulerConfig, pool: PagePool,
-                 max_len: int, chunkable: bool = True):
+                 max_len: int, chunkable: bool = True,
+                 prune_aware: bool = False):
         self.cfg = cfg
         self.pool = pool
         self.max_len = max_len
-        # chunked prefill needs causal cross-chunk attention and bypasses
-        # the SPLS plan (full-sequence); the engine disables it otherwise
+        # chunked prefill needs causal cross-chunk attention; the engine
+        # disables it for non-causal models (SPLS configs now stream their
+        # plan chunk by chunk instead of bypassing chunking)
         self.chunkable = chunkable
+        # SPLS page pruning: track observed kept/prompt ratios (EMA) so
+        # page-need accounting can use a post-prune estimate instead of
+        # assuming dense footprints; conservative (dense) fallback until
+        # the first observation
+        self.prune_aware = prune_aware
+        self.prune_ratio: Optional[float] = None
         self.waiting: deque = deque()   # (req, base_prompt, tokens, budget)
         self.slots: List[Optional[SeqState]] = [None] * cfg.n_slots
+        self.aborted: List = []         # optimistically admitted, never fit
+        self._solo_preempts: dict = {}  # rid -> self-preemption count
         self._admit_seq = 0
         self.stats = {"admitted": 0, "preemptions": 0, "retired": 0,
-                      "prefill_chunks": 0}
+                      "prefill_chunks": 0, "aborted": 0}
 
     # ------------------------------------------------------------------
+    def note_prune(self, prompt_len: int, kept: int) -> None:
+        """Record an observed post-prune keep ratio (engine calls this
+        after every pruned prefill); feeds the admission estimate."""
+        if prompt_len <= 0:
+            return
+        r = kept / prompt_len
+        self.prune_ratio = (r if self.prune_ratio is None else
+                            (1 - self.cfg.prune_ema) * self.prune_ratio
+                            + self.cfg.prune_ema * r)
+
+    def lifetime_pages(self, lp: int, budget: int) -> int:
+        """Worst-case pages a request holds at once over its lifetime.
+
+        Dense accounting (``pages_for(lp + budget)``) is the conservative
+        fallback.  With pruning observed, the post-prune estimate applies:
+        after prefill the sequence holds ``~ratio * lp`` kept slots plus
+        its decode growth, while the prefill-time peak is the dense prompt
+        (chunked prefill materializes every column until the vote
+        finalizes) or the kept count (full prefill allocates post-prune).
+        Underestimates are survivable: a request that turns out not to fit
+        is aborted by the solo-preemption guard instead of livelocking.
+        """
+        dense = self.pool.pages_for(min(lp + budget, self.max_len))
+        if not self.prune_aware or self.prune_ratio is None:
+            return dense
+        kept = math.ceil(self.prune_ratio * lp)
+        prefill_peak = self.pool.pages_for(
+            lp if self.use_chunks(lp) else kept)
+        post = self.pool.pages_for(min(kept + budget, self.max_len))
+        return min(dense, max(prefill_peak, post))
+
     def submit(self, req, prompt_tokens: List[int], budget: int) -> None:
         lp = len(prompt_tokens)
         first = (min(lp, self.cfg.prefill_chunk) if self.use_chunks(lp)
                  else lp)
         # both the lifetime footprint and the admission need (first unit of
         # work + watermark) must fit, else the request could never run
-        worst = max(self.pool.pages_for(min(lp + budget, self.max_len)),
+        worst = max(self.lifetime_pages(lp, budget),
                     self.pool.pages_for(first) + self.cfg.watermark)
         if worst > self.pool.capacity:
             raise ValueError(
@@ -150,13 +201,32 @@ class Scheduler:
         while True:
             need = self.pool.pages_for(n_slots_total) - len(st.pages)
             if need <= 0:
+                self._solo_preempts.pop(st.req.rid, None)
                 return True
             got = self.pool.alloc(need)
             if got is not None:
                 st.pages.extend(got)
+                self._solo_preempts.pop(st.req.rid, None)
                 return True
             victim = self._pick_victim(st)
             if victim is None:
+                # nobody else to evict.  Under conservative (dense)
+                # admission this is transient; under the optimistic
+                # post-prune estimate a request may genuinely never fit --
+                # re-prefilling it forever would livelock the engine, so
+                # after max_solo_preemptions it is aborted instead (the
+                # engine retires it with whatever it generated).
+                rid = st.req.rid
+                n = self._solo_preempts.get(rid, 0) + 1
+                self._solo_preempts[rid] = n
+                if n > self.cfg.max_solo_preemptions:
+                    self.pool.free(st.pages)
+                    st.pages = []
+                    self.slots[st.slot] = None
+                    self.aborted.append(st.req)
+                    self.stats["aborted"] += 1
+                    del self._solo_preempts[rid]  # rid may be resubmitted
+                    return False
                 self.preempt(st)
                 return False
             self.preempt(victim)
@@ -186,4 +256,5 @@ class Scheduler:
         self.pool.free(st.pages)
         st.pages = []
         self.slots[st.slot] = None
+        self._solo_preempts.pop(st.req.rid, None)
         self.stats["retired"] += 1
