@@ -29,19 +29,28 @@ def main():
                     help="block-pool paged KV cache engine")
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--compute-backend", default=None,
+                    choices=["dense", "packed_xla", "packed_pallas", "auto"],
+                    help="end-to-end sparse compute on the SPLS chunked "
+                         "prefill path (repro.sparse_compute)")
+    ap.add_argument("--s-threshold", type=float, default=0.6,
+                    help="SPLS similarity threshold (higher -> more rows "
+                         "similar -> more packed-compute savings)")
     args = ap.parse_args()
 
     cfg = ArchConfig(
         name="serve-demo", n_layers=4, d_model=128, n_heads=8, n_kv_heads=4,
         head_dim=16, d_ff=512, vocab_size=512,
         period=(BlockCfg(mixer="attn"),), remat=False,
-        spls=SPLSConfig(enabled=args.spls, k_ratio=0.25, s_threshold=0.6,
+        spls=SPLSConfig(enabled=args.spls, k_ratio=0.25,
+                        s_threshold=args.s_threshold,
                         f_threshold=3, window=8, causal=True))
     params = init_params(cfg, jax.random.PRNGKey(0))
     scfg = ServeConfig(n_slots=args.slots,
                        max_len=args.prompt_len + args.max_new + 8,
                        page_size=args.page_size,
-                       prefill_chunk=args.prefill_chunk)
+                       prefill_chunk=args.prefill_chunk,
+                       compute_backend=args.compute_backend)
     eng = (PagedServingEngine if args.paged else ServingEngine)(
         cfg, params, scfg)
 
@@ -65,6 +74,10 @@ def main():
         print(f"pool: peak_pages={eng.stats['peak_pages']} "
               f"preemptions={eng.stats['preemptions']} "
               f"prefill_chunks={eng.stats['prefill_chunks']}")
+        fs = eng.stats["flops_saved_pct"]
+        print(f"compute: backend={eng.stats['compute_backend']} "
+              f"flops_saved qkv={fs['qkv']:.1f}% attn={fs['attn']:.1f}% "
+              f"ffn={fs['ffn']:.1f}%")
     assert all(r.done for r in reqs), "queue did not drain"
     assert len(done) == len(reqs)
     for r in reqs[:3]:

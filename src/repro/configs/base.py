@@ -103,6 +103,12 @@ class ArchConfig:
     # | decode: "xla_dense_decode" | "pallas_flash_decode".  "auto" picks by
     # platform, sequence length, and sparsity mode (models/README.md).
     attn_backend: str = "auto"
+    # compute execution backend for the token-compacted *linear* ops (QKV
+    # projection / FFN) under SPLS (repro.sparse_compute registry):
+    # "dense" | "packed_xla" | "packed_pallas" | "auto".  "dense" keeps
+    # every existing path byte-identical; packed backends compute only
+    # critical rows and broadcast leaders (models/README.md).
+    compute_backend: str = "dense"
     # training
     remat: bool = True
     # shape support: names from LM_SHAPES this arch can run; long_500k only

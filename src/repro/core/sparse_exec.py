@@ -36,6 +36,8 @@ __all__ = [
     "gather_rows",
     "pack_by_mask",
     "unpack_by_leader",
+    "Compaction",
+    "compact_rows",
     "spls_attention",
     "spls_attention_packed",
     "spls_attention_chunked",
@@ -49,6 +51,21 @@ _NEG = -1e30
 def gather_rows(x: jax.Array, idx: jax.Array) -> jax.Array:
     """Gather along the row axis (-2) with a (..., L) index map."""
     return jnp.take_along_axis(x, idx[..., None], axis=-2)
+
+
+def _pack_order(mask: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Stable critical-first pack order of ``mask`` (..., L).
+
+    Returns ``(order, order_pos)``: ``order`` lists source rows packed
+    first (True rows in index order, then False rows in index order);
+    ``order_pos[row]`` is the unclamped slot each row would occupy.  The
+    single source of the pack ordering -- :func:`pack_by_mask` and
+    :func:`compact_rows` both build on it, which is what keeps their
+    full-capacity numerics interchangeable (parity-test-pinned).
+    """
+    order = jnp.argsort(~mask, axis=-1, stable=True).astype(jnp.int32)
+    order_pos = jnp.argsort(order, axis=-1, stable=True).astype(jnp.int32)
+    return order, order_pos
 
 
 def pack_by_mask(mask: jax.Array, capacity: int) -> Tuple[jax.Array, jax.Array]:
@@ -65,11 +82,9 @@ def pack_by_mask(mask: jax.Array, capacity: int) -> Tuple[jax.Array, jax.Array]:
     """
     L = mask.shape[-1]
     C = min(capacity, L)
-    order = jnp.argsort(~mask, axis=-1, stable=True).astype(jnp.int32)
+    order, order_pos = _pack_order(mask)
     perm = order[..., :C]
-    # slot_of[row] = position of `row` inside `order`, clamped to C-1
-    slots = jnp.argsort(order, axis=-1, stable=True).astype(jnp.int32)
-    slot_of = jnp.minimum(slots, jnp.int32(C - 1))
+    slot_of = jnp.minimum(order_pos, jnp.int32(C - 1))
     return perm, slot_of
 
 
@@ -82,6 +97,79 @@ def unpack_by_leader(packed: jax.Array, slot_of: jax.Array,
     """
     src_slot = jnp.take_along_axis(slot_of, leader, axis=-1)
     return gather_rows(packed, src_slot)
+
+
+class Compaction(NamedTuple):
+    """Static-capacity packing of critical rows, ready for packed execution.
+
+    The plan->compaction adapter consumed by the packed compute backends
+    (:mod:`repro.sparse_compute`): ``perm`` names the source row each packed
+    slot computes, ``src_slot`` the packed slot each *output* row reads --
+    leader indirection already resolved, capacity overflow redirected to the
+    window leader (see :func:`compact_rows`).
+    """
+
+    perm: jax.Array        # (..., C) int32 source row per packed slot
+    src_slot: jax.Array    # (..., *extra, L) int32 slot each row reads
+    n_critical: jax.Array  # (...,) int32 critical-row count (capacity
+    #                        controller observation; excludes nothing)
+
+
+def _window_leader(crit: jax.Array, window: int) -> jax.Array:
+    """(..., L) index of the first critical row in each row's window
+    (``L`` where a window has none -- callers must guard)."""
+    L = crit.shape[-1]
+    ids = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), crit.shape)
+    cand = jnp.where(crit, ids, jnp.int32(L))
+    pad = (-L) % window
+    if pad:
+        cand = jnp.pad(cand, [(0, 0)] * (cand.ndim - 1) + [(0, pad)],
+                       constant_values=L)
+    nw = cand.shape[-1] // window
+    wmin = cand.reshape(*cand.shape[:-1], nw, window).min(-1)   # (..., nw)
+    return jnp.take_along_axis(wmin, ids // window, axis=-1)
+
+
+def compact_rows(crit: jax.Array, capacity: int,
+                 leader: Optional[jax.Array] = None,
+                 window: Optional[int] = None) -> Compaction:
+    """Turn a critical-row mask (+ leader map) into a :class:`Compaction`.
+
+    crit: (..., L) bool; leader: (..., *extra, L) int32 row each output row
+    recovers from (extra leading axes -- e.g. per-head leaders over a
+    cross-head union pack -- broadcast against ``crit``'s dims); ``None``
+    means every row reads itself.  Rows pack in stable index order,
+    critical first (:func:`pack_by_mask`'s order).
+
+    Capacity overflow: a row whose leader did not fit falls back to its
+    **window leader** -- the first critical row of the leader's similarity
+    window (leaders are window-local, so that is the row's own window) --
+    when ``window`` is given and that row is packed; the last packed slot
+    is the final fallback (the legacy clamp).  ``window=None`` keeps the
+    legacy clamp-only behavior.
+    """
+    L = crit.shape[-1]
+    C = min(capacity, L)
+    order, order_pos = _pack_order(crit)
+    perm = order[..., :C]
+    target = leader if leader is not None else jnp.broadcast_to(
+        jnp.arange(L, dtype=jnp.int32), crit.shape)
+    extra = target.ndim - crit.ndim
+    op = order_pos.reshape(order_pos.shape[:-1] + (1,) * extra + (L,))
+    op = jnp.broadcast_to(op, target.shape[:-1] + (L,))
+    if window is not None:
+        wl = _window_leader(crit, window)                       # (..., L)
+        wl = jnp.broadcast_to(
+            wl.reshape(wl.shape[:-1] + (1,) * extra + (L,)), op.shape)
+        wlt = jnp.take_along_axis(wl, target, axis=-1)
+        wls = jnp.minimum(wlt, jnp.int32(L - 1))
+        overflow = jnp.take_along_axis(op, target, axis=-1) >= C
+        fb_ok = (wlt < L) & (jnp.take_along_axis(op, wls, axis=-1) < C)
+        target = jnp.where(overflow & fb_ok, wls, target)
+    src_slot = jnp.minimum(jnp.take_along_axis(op, target, axis=-1),
+                           jnp.int32(C - 1))
+    return Compaction(perm=perm, src_slot=src_slot,
+                      n_critical=crit.sum(-1).astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -241,9 +329,17 @@ def spls_ffn(x: jax.Array, ffn_fn: Callable[[jax.Array], jax.Array],
 
 
 def spls_ffn_packed(x: jax.Array, ffn_fn: Callable[[jax.Array], jax.Array],
-                    plan: SparsityPlan, capacity: int) -> jax.Array:
-    """Capacity-mode sparse FFN: pack critical tokens, compute, scatter."""
-    perm, slot_of = pack_by_mask(plan.ffn_critical, capacity)
-    xp = gather_rows(x, perm)
+                    plan: SparsityPlan, capacity: int,
+                    window: Optional[int] = None) -> jax.Array:
+    """Capacity-mode sparse FFN: pack critical tokens, compute, scatter.
+
+    With ``window`` (the SPLS similarity window) given, capacity-overflow
+    rows fall back to their *window leader's* output exactly (the first
+    packed critical row of their window) instead of the legacy last-slot
+    clamp; see :func:`compact_rows`.
+    """
+    comp = compact_rows(plan.ffn_critical, capacity, leader=plan.ffn_leader,
+                        window=window)
+    xp = gather_rows(x, comp.perm)
     yp = ffn_fn(xp)
-    return unpack_by_leader(yp, slot_of, plan.ffn_leader)
+    return gather_rows(yp, comp.src_slot)

@@ -10,7 +10,8 @@ import jax.numpy as jnp
 from repro.core.quantizers import hlog_project
 
 __all__ = ["hlog_qmatmul_ref", "flash_attention_ref",
-           "local_similarity_ref", "flash_decode_ref", "paged_decode_ref"]
+           "local_similarity_ref", "flash_decode_ref", "paged_decode_ref",
+           "gathered_matmul_ref"]
 
 
 def hlog_qmatmul_ref(xq: jax.Array, wq: jax.Array) -> jax.Array:
@@ -22,6 +23,18 @@ def hlog_qmatmul_ref(xq: jax.Array, wq: jax.Array) -> jax.Array:
     SD/SJA/converter datapath.
     """
     return hlog_project(xq) @ hlog_project(wq)
+
+
+def gathered_matmul_ref(x: jax.Array, w: jax.Array, perm: jax.Array,
+                        src_slot: Optional[jax.Array] = None) -> jax.Array:
+    """Pack-then-matmul(-then-scatter) oracle for ``gathered_matmul``.
+
+    x: (L, D); w: (D, F); perm: (C,) packed source rows; src_slot: optional
+    (M,) packed slot each output row reads.  This is exactly the XLA
+    ``pack_by_mask``/``unpack_by_leader`` execution the kernel fuses.
+    """
+    out = x[perm].astype(jnp.float32) @ w.astype(jnp.float32)
+    return out if src_slot is None else out[src_slot]
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -42,7 +42,7 @@ from .common import apply_rope, dense_init, rms_norm, rope_freqs
 
 __all__ = ["init_attention", "attention_forward", "attention_decode",
            "KVCache", "init_kv_cache", "head_shard_mode", "project_qkv",
-           "output_proj"]
+           "project_kv", "output_proj"]
 
 
 class KVCache(NamedTuple):
@@ -169,9 +169,33 @@ def _out_proj(cfg: ArchConfig, p: dict, o: jax.Array, mode: str) -> jax.Array:
     return constrain(out, ("batch", "seq", "embed"))
 
 
+def _project_kv(cfg: ArchConfig, p: dict, x: jax.Array,
+                positions: jax.Array, mode: str = "structured"):
+    """K/V-only projection: x (B, L, D) -> k/v (B, KV, L, Dh) (structured).
+
+    Row-for-row identical to the k/v half of :func:`_project_qkv`; the
+    serving packed-compute path uses it so every chunk row's K/V column
+    still materializes (the cross-chunk prune vote needs them all) while
+    Q runs packed on the critical-row union
+    (:func:`repro.sparse_compute.packed_project_q`).
+    """
+    assert mode == "structured", "packed serving keeps the structured layout"
+    Dh = cfg.resolved_head_dim
+    k = jnp.einsum("bld,dkh->bklh", x, p["wk"])
+    v = jnp.einsum("bld,dkh->bklh", x, p["wv"])
+    k = constrain(k, ("batch", "kv_heads", "seq", None))
+    v = constrain(v, ("batch", "kv_heads", "seq", None))
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    sin, cos = rope_freqs(positions, Dh, cfg.rope_theta)
+    k = apply_rope(k, sin[:, None], cos[:, None])
+    return k, v
+
+
 # public seams for alternative execution layers (the paged serving engine
 # projects QKV / re-projects outputs itself, around its block-pool cache)
 project_qkv = _project_qkv
+project_kv = _project_kv
 output_proj = _out_proj
 
 

@@ -342,7 +342,24 @@ def block_forward(cfg: ArchConfig, blk: BlockCfg, p: dict, x: jax.Array,
         if plan is not None and cfg.spls.ffn_sparsity:
             qc, _ = _capacities(cfg, x.shape[1])
             if qc is not None:
-                h2 = spls_ffn_packed(xn2, fn, plan, qc)
+                # capacity mode: the compute-backend axis decides how the
+                # packed rows execute (repro.sparse_compute; "dense"
+                # config default keeps the XLA pack/unpack closure); MoE
+                # blocks keep it -- their capacity routing *is* the pack
+                from repro.sparse_compute import (is_packed,
+                                                  resolve_compute_backend)
+                cb = resolve_compute_backend(cfg.compute_backend,
+                                             sparse=True)
+                if is_packed(cb) and not blk.use_moe:
+                    from repro.core.sparse_exec import compact_rows
+                    from repro.sparse_compute import packed_mlp
+                    comp = compact_rows(plan.ffn_critical, qc,
+                                        leader=plan.ffn_leader,
+                                        window=cfg.spls.window)
+                    h2 = packed_mlp(cfg, p["ffn"], xn2, comp, cb)
+                else:
+                    h2 = spls_ffn_packed(xn2, fn, plan, qc,
+                                         window=cfg.spls.window)
             else:
                 h2 = spls_ffn(xn2, fn, plan)
         else:

@@ -1,12 +1,35 @@
-"""Compat shim: the serving engine moved to :mod:`repro.serving`.
+"""Deprecated compat shim: the serving engine moved to :mod:`repro.serving`.
 
-The dense fixed-slot engine (:class:`ServingEngine`) and the block-pool
-paged engine (:class:`PagedServingEngine`) now live in
-``repro.serving.engine``; this module re-exports the public names so
-existing imports (`from repro.runtime.serve import ...`) keep working.
+Importing this module (or any attribute from it) emits a
+``DeprecationWarning`` pointing at :mod:`repro.serving`.  Attribute access
+forwards to ``repro.serving`` dynamically -- this module no longer keeps
+its own copy of the export list, so it can never drift from what
+``repro.serving.__init__`` actually owns.
 """
 
-from repro.serving import (PagedServingEngine, Request, ServeConfig,
-                           ServingEngine)
+import warnings
 
+# star-import surface of the old shim (module __getattr__ resolves each)
 __all__ = ["Request", "ServeConfig", "ServingEngine", "PagedServingEngine"]
+
+warnings.warn(
+    "repro.runtime.serve is deprecated: the serving engines live in "
+    "repro.serving (import Request/ServeConfig/ServingEngine/"
+    "PagedServingEngine from there)", DeprecationWarning, stacklevel=2)
+
+
+def __getattr__(name):
+    from repro import serving
+
+    if name in serving.__all__:
+        warnings.warn(
+            f"repro.runtime.serve.{name} is deprecated; import it from "
+            f"repro.serving", DeprecationWarning, stacklevel=2)
+        return getattr(serving, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    from repro import serving
+
+    return sorted(set(globals()) | set(serving.__all__))

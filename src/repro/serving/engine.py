@@ -23,8 +23,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from collections import deque
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +34,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import decode_step, init_cache, prefill
 from repro.models.attn_backend import AUTO
+from repro.sparse_compute import (CapacityController, chunk_flops, is_packed,
+                                  resolve_compute_backend)
 
 from .pager import (NULL_PAGE, PagePool, init_paged_cache, init_pos_pages,
                     init_pred_cache, keep_from_votes, spls_token_votes)
@@ -77,6 +80,19 @@ class ServeConfig:
     watermark: int = 0
     spls_page_prune: bool = True    # prune dead KV columns out of the pool
     spls_prune_vote: float = 0.5    # head-vote fraction a column must win
+    # round a misaligned prefill_chunk up to the next multiple of
+    # spls.window (one-time warning) instead of raising
+    auto_align_chunk: bool = False
+    # end-to-end sparse compute on the SPLS chunked-prefill path
+    # (repro.sparse_compute): None -> cfg.compute_backend ("dense" keeps
+    # today's simulation-mode execution); "packed_xla"/"packed_pallas"
+    # compute only critical rows at bucketed static capacities
+    compute_backend: Optional[str] = None
+    # static capacity bucket set for the packed path (None -> quarter
+    # steps of prefill_chunk); the margin scales the EMA'd critical-row
+    # estimate before bucket selection (sparse_compute.CapacityController)
+    capacity_buckets: Optional[Tuple[int, ...]] = None
+    capacity_margin: float = 1.25
 
 
 def _backend_for_site(name: Optional[str], *, decode: bool,
@@ -127,6 +143,17 @@ class _SamplerMixin:
 class ServingEngine(_SamplerMixin):
     def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig):
         assert cfg.input_mode == "tokens", "engine serves token models"
+        # the dense engine has no packed-compute path (it is the
+        # simulation-mode parity oracle); surface a requested packed
+        # backend loudly instead of silently measuring dense compute
+        if is_packed(resolve_compute_backend(
+                scfg.compute_backend if scfg.compute_backend is not None
+                else cfg.compute_backend, sparse=cfg.spls.enabled)):
+            warnings.warn(
+                "ServingEngine (dense fixed-slot) executes dense compute "
+                "only; the configured packed compute_backend applies to "
+                "PagedServingEngine's chunked SPLS prefill and is ignored "
+                "here", RuntimeWarning, stacklevel=2)
         cfg_fwd, cfg_dec = cfg, cfg
         if scfg.attn_backend is not None:
             cfg_fwd = dataclasses.replace(cfg, attn_backend=_backend_for_site(
@@ -233,6 +260,30 @@ class PagedServingEngine(_SamplerMixin):
                 scfg.attn_backend, decode=False))
             cfg_pgd = dataclasses.replace(cfg, attn_backend=_backend_for_site(
                 scfg.attn_backend, decode=True, paged=True))
+        # chunked prefill needs causal cross-chunk attention.  SPLS no
+        # longer disables it: the plan streams one window-aligned chunk at
+        # a time (the paper's progressive generation scheme) and the
+        # page-prune vote accumulates across chunks.
+        chunkable = cfg.causal
+        if cfg.spls.enabled and chunkable \
+                and scfg.prefill_chunk % cfg.spls.window:
+            if scfg.auto_align_chunk:
+                aligned = -(-scfg.prefill_chunk // cfg.spls.window) \
+                    * cfg.spls.window
+                warnings.warn(
+                    f"prefill_chunk ({scfg.prefill_chunk}) is not a "
+                    f"multiple of the SPLS similarity window "
+                    f"({cfg.spls.window}); auto_align_chunk rounded it up "
+                    f"to {aligned}", RuntimeWarning, stacklevel=2)
+                scfg = dataclasses.replace(scfg, prefill_chunk=aligned)
+            else:
+                raise ValueError(
+                    f"prefill_chunk ({scfg.prefill_chunk}) must be a "
+                    f"multiple of the SPLS similarity window "
+                    f"({cfg.spls.window}): chunk boundaries must align "
+                    f"with similarity windows for chunked prefill to "
+                    f"reproduce the full-prefill plan (set "
+                    f"ServeConfig.auto_align_chunk=True to round up)")
         self.cfg, self.params = cfg, params
         self._init_sampler(scfg)
 
@@ -243,18 +294,23 @@ class PagedServingEngine(_SamplerMixin):
                    else scfg.n_slots * self.pages_per_seq + 1)
         self.pool = PagePool(n_pages, ps)
         self._prune = cfg.spls.enabled and scfg.spls_page_prune
-        # chunked prefill needs causal cross-chunk attention.  SPLS no
-        # longer disables it: the plan streams one window-aligned chunk at
-        # a time (the paper's progressive generation scheme) and the
-        # page-prune vote accumulates across chunks.
-        chunkable = cfg.causal
-        if cfg.spls.enabled and chunkable \
-                and scfg.prefill_chunk % cfg.spls.window:
-            raise ValueError(
-                f"prefill_chunk ({scfg.prefill_chunk}) must be a multiple "
-                f"of the SPLS similarity window ({cfg.spls.window}): "
-                f"chunk boundaries must align with similarity windows for "
-                f"chunked prefill to reproduce the full-prefill plan")
+        # end-to-end sparse compute (the SPLS chunked-prefill path):
+        # "dense" keeps simulation-mode execution; packed backends compute
+        # only critical rows at bucketed static capacities (one jit per
+        # bucket pair) with leaders broadcasting to their followers
+        self._compute = resolve_compute_backend(
+            scfg.compute_backend if scfg.compute_backend is not None
+            else cfg.compute_backend, sparse=cfg.spls.enabled)
+        cs = scfg.prefill_chunk
+        if is_packed(self._compute):
+            self._cap_q = CapacityController(
+                cs, buckets=scfg.capacity_buckets,
+                margin=scfg.capacity_margin)
+            self._cap_f = CapacityController(
+                cs, buckets=scfg.capacity_buckets,
+                margin=scfg.capacity_margin)
+        else:
+            self._cap_q = self._cap_f = None
         self.sched = Scheduler(
             SchedulerConfig(n_slots=scfg.n_slots,
                             prefill_chunk=scfg.prefill_chunk,
@@ -286,24 +342,45 @@ class PagedServingEngine(_SamplerMixin):
             lambda p, c, pp, tb, start, toks, valid: paged_prefill_chunk(
                 cfg, p, c, pp, tb, start, toks, valid),
             donate_argnums=(1, 2))
-        # SPLS chunk step: one jit for *all* prompt lengths (top-k count,
-        # start, and valid ride in as traced scalars)
-        self._chunk_spls = jax.jit(
-            lambda p, c, pc, pp, tb, start, toks, valid, k:
-            paged_prefill_chunk_spls(cfg, p, c, pc, pp, tb, start, toks,
-                                     valid, k),
-            donate_argnums=(1, 2, 3))
+        # SPLS chunk step: one jit covers *all* prompt lengths (top-k
+        # count, start, and valid ride in as traced scalars); under packed
+        # compute, one jit per capacity-bucket pair (the controller keeps
+        # the pair set small)
+        self._chunk_spls_jits: dict = {}
         self._compact = jax.jit(
             lambda c, pp, tb, keep: compact_slots(c, pp, tb, keep),
             donate_argnums=(0, 1))
 
+    def _get_chunk_spls(self, cq: Optional[int], cf: Optional[int]):
+        """Jitted SPLS chunk step for one capacity-bucket pair (dense
+        compute uses the single ``(None, None)`` entry)."""
+        key = (cq, cf)
+        fn = self._chunk_spls_jits.get(key)
+        if fn is None:
+            cfg, cb = self.cfg, self._compute
+            fn = jax.jit(
+                lambda p, c, pc, pp, tb, start, toks, valid, k:
+                paged_prefill_chunk_spls(cfg, p, c, pc, pp, tb, start,
+                                         toks, valid, k, q_capacity=cq,
+                                         ffn_capacity=cf,
+                                         compute_backend=cb),
+                donate_argnums=(1, 2, 3))
+            self._chunk_spls_jits[key] = fn
+        return fn
+
     # ------------------------------------------------------------------
     @property
     def stats(self) -> dict:
-        return {**self.sched.stats,
-                "pages_in_use": self.pool.pages_in_use,
-                "peak_pages": self.pool.peak_in_use,
-                "free_pages": self.pool.free_pages}
+        out = {**self.sched.stats,
+               "pages_in_use": self.pool.pages_in_use,
+               "peak_pages": self.pool.peak_in_use,
+               "free_pages": self.pool.free_pages,
+               "compute_backend": self._compute,
+               "flops_saved_pct": self.sched.flops_saved_pct()}
+        if self._cap_q is not None:
+            out["capacity_q"] = dict(self._cap_q.stats)
+            out["capacity_ffn"] = dict(self._cap_f.stats)
+        return out
 
     def submit(self, req: Request) -> None:
         lp = int(req.prompt.shape[0])
@@ -346,6 +423,10 @@ class PagedServingEngine(_SamplerMixin):
         st.kv_len = n_kept
         st.cur_pos = st.prompt_len
         st.prefilled = st.prompt_len
+        # whole-prompt prefill runs dense/simulation compute (packed
+        # capacities apply on the chunked path); charged dense == executed
+        self.sched.note_flops(chunk_flops(self.cfg, st.prompt_len,
+                                          st.prompt_len))
         if self._prune:
             self.sched.note_prune(st.prompt_len, n_kept)
         self._emit_first(st, logits[0, -1])
@@ -365,8 +446,12 @@ class PagedServingEngine(_SamplerMixin):
                 self.pred_cache = init_pred_cache(self.cfg, self._n_pages,
                                                   self.page_size)
             k = topk_count(st.prompt_len, self.cfg.spls.k_ratio)
+            packed = self._cap_q is not None
+            cq = self._cap_q.capacity() if packed else None
+            cf = (self._cap_f.capacity()
+                  if packed and self.cfg.spls.ffn_sparsity else None)
             (logits, self.cache, self.pred_cache, self.pos_pages,
-             kv_any) = self._chunk_spls(
+             kv_any, counts) = self._get_chunk_spls(cq, cf)(
                 self.params, self.cache, self.pred_cache, self.pos_pages,
                 jnp.asarray(self._table_row(st)),
                 jnp.asarray(start, jnp.int32), jnp.asarray(chunk)[None, :],
@@ -377,12 +462,27 @@ class PagedServingEngine(_SamplerMixin):
                 votes = np.asarray(kv_any).reshape(self.cfg.n_heads, -1)
                 st.head_votes = (votes if st.head_votes is None
                                  else st.head_votes | votes)
+            if packed:
+                # the host readback of the critical counts syncs on the
+                # chunk step; only the packed path pays it (dense compute
+                # discards the counts and stays fully async)
+                n_q, n_f = (int(v) for v in np.asarray(counts).max(axis=0))
+                self._cap_q.observe(n_q)
+                if n_q > cq:
+                    self._cap_q.note_overflow()
+                if self.cfg.spls.ffn_sparsity:
+                    self._cap_f.observe(n_f)
+                    if n_f > cf:
+                        self._cap_f.note_overflow()
+            self.sched.note_flops(chunk_flops(
+                self.cfg, cs, start + valid, q_rows=cq, ffn_rows=cf))
         else:
             logits, self.cache, self.pos_pages = self._chunk(
                 self.params, self.cache, self.pos_pages,
                 jnp.asarray(self._table_row(st)),
                 jnp.asarray(start, jnp.int32), jnp.asarray(chunk)[None, :],
                 jnp.asarray(valid, jnp.int32))
+            self.sched.note_flops(chunk_flops(self.cfg, cs, start + valid))
         st.prefilled += valid
         st.kv_len += valid
         st.cur_pos += valid

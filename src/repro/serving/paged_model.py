@@ -31,7 +31,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import resolve_backend, get_backend
-from repro.models.attention import project_qkv, output_proj
+from repro.models.attention import output_proj, project_kv, project_qkv
 from repro.models.common import dtype_of, rms_norm, softcap as _softcap
 from repro.models.model import embed_inputs, head_logits
 from repro.models.moe import ffn_forward
@@ -100,19 +100,26 @@ def _write_chunk_kv(kc: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
 
 
 def _residual_ffn(cfg: ArchConfig, blk, bp, x: jax.Array, h: jax.Array,
-                  ffn_leader: jax.Array = None) -> jax.Array:
+                  ffn_leader: jax.Array = None, ffn_comp=None,
+                  compute_backend: str = "dense") -> jax.Array:
     """Attention residual + optional post-norms + FFN residual, shared by
     the decode and chunked-prefill scan bodies.  ``ffn_leader`` (local row
     ids) enables simulation-mode sparse FFN: similar tokens copy their MFI
-    leader's output."""
+    leader's output.  ``ffn_comp`` (a :class:`~repro.core.sparse_exec.Compaction`)
+    switches to *packed* sparse FFN through the compute-backend registry:
+    only critical rows are computed, leaders broadcast to followers."""
     if cfg.use_post_norm:
         h = rms_norm(h, bp["post_ln1"], cfg.norm_eps)
     x = x + h
     if blk.has_ffn:
         xn2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
-        h2 = ffn_forward(cfg, blk.use_moe, bp["ffn"], xn2)
-        if ffn_leader is not None:
-            h2 = jnp.take_along_axis(h2, ffn_leader[..., None], axis=-2)
+        if ffn_comp is not None and not blk.use_moe:
+            from repro.sparse_compute import packed_mlp
+            h2 = packed_mlp(cfg, bp["ffn"], xn2, ffn_comp, compute_backend)
+        else:
+            h2 = ffn_forward(cfg, blk.use_moe, bp["ffn"], xn2)
+            if ffn_leader is not None:
+                h2 = jnp.take_along_axis(h2, ffn_leader[..., None], axis=-2)
         if cfg.use_post_norm:
             h2 = rms_norm(h2, bp["post_ln2"], cfg.norm_eps)
         x = x + h2
@@ -246,7 +253,10 @@ def paged_prefill_chunk(cfg: ArchConfig, params, cache,
 def paged_prefill_chunk_spls(cfg: ArchConfig, params, cache, pred_cache,
                              pos_pages: jax.Array, table: jax.Array,
                              start: jax.Array, tokens: jax.Array,
-                             valid: jax.Array, topk_k: jax.Array):
+                             valid: jax.Array, topk_k: jax.Array,
+                             q_capacity: Optional[int] = None,
+                             ffn_capacity: Optional[int] = None,
+                             compute_backend: str = "dense"):
     """One SPLS prompt chunk for a single sequence (B = 1).
 
     The streaming realization of the progressive generation scheme: every
@@ -267,16 +277,43 @@ def paged_prefill_chunk_spls(cfg: ArchConfig, params, cache, pred_cache,
     page-prune vote only finalizes with the last chunk (votes are monotone
     in rows), after which the engine runs :func:`compact_slots`.
 
+    **End-to-end sparse compute** (``compute_backend`` ``"packed_xla"`` /
+    ``"packed_pallas"``, static capacities ``q_capacity`` /
+    ``ffn_capacity``): the Q projection and attention run only on the
+    *cross-head union* of critical rows packed to ``q_capacity`` (leaders
+    broadcast to their followers through the compaction's read slots), and
+    the FFN runs only on FFN-critical rows packed to ``ffn_capacity`` --
+    the serving realization of the paper's end-to-end sparsity.  K/V
+    projections stay dense: every chunk row's column must materialize
+    until the cross-chunk prune vote finalizes.  At full capacities the
+    packed path is bit-for-bit the dense (``"dense"``) path; below them,
+    overflow rows fall back to their window leader
+    (:func:`repro.core.sparse_exec.compact_rows`).
+
     Returns ``(logits (1, 1, V), new_cache, new_pred_cache, new_pos_pages,
-    kv_any)`` with ``kv_any (1, KV, G, S)`` layer 0's per-head column-keep
-    contribution for the engine's vote accumulator.
+    kv_any, crit_counts)`` with ``kv_any (1, KV, G, S)`` layer 0's per-head
+    column-keep contribution for the engine's vote accumulator and
+    ``crit_counts (n_periods, 2)`` the per-period max of (union-critical
+    rows, FFN-critical rows) -- the capacity controller's observations.
     """
     assert cfg.causal, "chunked prefill needs causal attention"
     from repro.core.predict import predict_qk
-    from repro.core.sparse_exec import _masked_softmax, gather_rows
+    from repro.core.sparse_exec import (_masked_softmax, compact_rows,
+                                        gather_rows)
     from repro.core.spls_chunked import plan_chunk
+    from repro.sparse_compute import is_packed, packed_project_q
 
     _, CS = tokens.shape
+    if CS % cfg.spls.window:
+        raise ValueError(
+            f"prefill_chunk ({CS}) must be a multiple of the SPLS "
+            f"similarity window ({cfg.spls.window}): chunk boundaries must "
+            f"align with similarity windows for chunked prefill to "
+            f"reproduce the full-prefill plan (set "
+            f"ServeConfig.auto_align_chunk=True to round up automatically)")
+    packed = is_packed(compute_backend)
+    Cq = min(q_capacity or CS, CS)
+    Cf = min(ffn_capacity or CS, CS)
     N, ps = pos_pages.shape
     S = table.shape[0] * ps
     D, KV, Dh = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -296,6 +333,8 @@ def paged_prefill_chunk_spls(cfg: ArchConfig, params, cache, pred_cache,
         pparams = _cast_params(pparams, dtype)
         new_caches, new_preds = [], []
         kv_any0 = None
+        counts = jnp.zeros((2,), jnp.int32)
+        ridx = jnp.arange(CS, dtype=jnp.int32)
         for blk, bp, kc, pk in zip(cfg.period, pparams, pcache, ppred):
             xn = rms_norm(x, bp["ln1"], cfg.norm_eps)
             # -- prediction: extend the predictor pages, plan this block
@@ -315,41 +354,80 @@ def paged_prefill_chunk_spls(cfg: ArchConfig, params, cache, pred_cache,
                             f_threshold=scfg.f_threshold, causal=True)
             if kv_any0 is None:
                 kv_any0 = pb.kv_any
-            # -- formal QKV at original positions; write into pages
-            q, k_new, v_new = project_qkv(cfg, bp["attn"], xn, positions,
+            lead_local = pb.q_leader - start
+            # capacity-controller observations: union of per-head critical
+            # rows (the Q pack) and valid FFN-critical rows (padded rows
+            # report FFN-critical but never count)
+            crit_any = jnp.any(pb.q_critical, axis=(1, 2))     # (1, CS)
+            n_ffn = (pb.ffn_critical[0] & (ridx < valid)).sum()
+            counts = jnp.maximum(
+                counts, jnp.stack([crit_any.sum(), n_ffn]).astype(jnp.int32))
+            # -- formal K/V at original positions for *every* chunk row
+            # (columns must materialize until the prune vote finalizes);
+            # Q packed to the critical-row union when a packed compute
+            # backend is active, dense otherwise
+            if packed:
+                k_new, v_new = project_kv(cfg, bp["attn"], xn, positions,
                                           "structured")
+            else:
+                q, k_new, v_new = project_qkv(cfg, bp["attn"], xn,
+                                              positions, "structured")
             kc = _write_chunk_kv(kc, k_new, v_new, flat)
-            # -- simulation-mode SPLS attention over all written slots:
-            # similar rows use their leader's Q row and mask row (leaders
-            # are window-local, hence chunk-local)
             kg = kc.k_pages[:, table][None].reshape(1, KV, S, Dh)
             vg = kc.v_pages[:, table][None].reshape(1, KV, S, Dh)
             mask = pb.mask
             if blk.window is not None:
                 mask = mask & (positions[0][:, None] - slot_idx[None, :]
                                < blk.window)
-            lead_local = pb.q_leader - start
-            q_eff = gather_rows(q, lead_local)
-            mask_eff = jnp.take_along_axis(mask, lead_local[..., None],
-                                           axis=-2)
-            s = jnp.einsum("bkgqd,bkld->bkgql", q_eff, kg) * (Dh ** -0.5)
+            # row selection: the two modes differ only in *which* q/mask
+            # rows the shared score/softmax/AV block sees.
+            if packed:
+                # packed SPLS attention: compute only the union rows'
+                # scores (every head's leaders are in the union), then
+                # every row reads its leader's packed slot.  Bit-for-bit
+                # the simulation-mode path at Cq == CS; overflow rows
+                # fall back to their window leader.
+                qcomp = compact_rows(crit_any, Cq, leader=lead_local,
+                                     window=scfg.window)
+                q_sel = packed_project_q(cfg, bp["attn"], xn, sl,
+                                         qcomp.perm[0], compute_backend)
+                perm_idx = qcomp.perm[:, None, None, :, None]
+                mask_sel = jnp.take_along_axis(mask, perm_idx, axis=-2)
+            else:
+                # simulation-mode SPLS attention over all written slots:
+                # similar rows use their leader's Q row and mask row
+                # (leaders are window-local, hence chunk-local)
+                q_sel = gather_rows(q, lead_local)
+                mask_sel = jnp.take_along_axis(mask, lead_local[..., None],
+                                               axis=-2)
+            s = jnp.einsum("bkgqd,bkld->bkgql", q_sel, kg) * (Dh ** -0.5)
             if cfg.attn_softcap is not None:
                 s = jnp.tanh(s / cfg.attn_softcap) * cfg.attn_softcap
-            a = _masked_softmax(s, mask_eff)
+            a = _masked_softmax(s, mask_sel)
             o = jnp.einsum("bkgql,bkld->bkgqd", a, vg)
+            if packed:
+                o = jnp.take_along_axis(o, qcomp.src_slot[..., None],
+                                        axis=-2)
             h = output_proj(cfg, bp["attn"], o, "structured")
+            ffn_comp = None
+            if packed and scfg.ffn_sparsity and not blk.use_moe:
+                ffn_comp = compact_rows(pb.ffn_critical, Cf,
+                                        leader=pb.ffn_leader - start,
+                                        window=scfg.window)
             x = _residual_ffn(cfg, blk, bp, x, h,
                               ffn_leader=(pb.ffn_leader - start
-                                          if scfg.ffn_sparsity else None))
+                                          if scfg.ffn_sparsity else None),
+                              ffn_comp=ffn_comp,
+                              compute_backend=compute_backend)
             new_caches.append(kc)
             new_preds.append(pk)
-        return x, (tuple(new_caches), tuple(new_preds), kv_any0)
+        return x, (tuple(new_caches), tuple(new_preds), kv_any0, counts)
 
-    x, (new_cache, new_pred, kv_any) = jax.lax.scan(
+    x, (new_cache, new_pred, kv_any, counts) = jax.lax.scan(
         scan_body, x, (params["periods"], cache, pred_cache))
     x_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
     return (head_logits(cfg, params, x_last), new_cache, new_pred,
-            pos_pages, jax.tree.map(lambda a: a[0], kv_any))
+            pos_pages, jax.tree.map(lambda a: a[0], kv_any), counts)
 
 
 def compact_slots(cache, pos_pages: jax.Array, table: jax.Array,

@@ -102,8 +102,26 @@ class Scheduler:
         self._admit_seq = 0
         self.stats = {"admitted": 0, "preemptions": 0, "retired": 0,
                       "prefill_chunks": 0, "aborted": 0}
+        # lifetime FLOPs accounting: [dense-equivalent, executed] per
+        # component, accumulated over every prefill the engine runs --
+        # the measured realization of the paper's Fig. 15 breakdown on
+        # the serving path (fed by sparse_compute.accounting.chunk_flops)
+        self.flops = {c: [0.0, 0.0] for c in ("qkv", "attn", "ffn")}
 
     # ------------------------------------------------------------------
+    def note_flops(self, comp: dict) -> None:
+        """Accumulate one prefill step's (dense, executed) FLOPs per
+        component (``{"qkv": (dense, executed), ...}``)."""
+        for c, (dense, executed) in comp.items():
+            self.flops[c][0] += dense
+            self.flops[c][1] += executed
+
+    def flops_saved_pct(self) -> dict:
+        """Lifetime percent of dense-equivalent FLOPs *not* executed,
+        per component (0.0 before any prefill ran)."""
+        return {c: (100.0 * (1.0 - e / d) if d > 0 else 0.0)
+                for c, (d, e) in self.flops.items()}
+
     def note_prune(self, prompt_len: int, kept: int) -> None:
         """Record an observed post-prune keep ratio (engine calls this
         after every pruned prefill); feeds the admission estimate."""

@@ -1,0 +1,40 @@
+"""End-to-end sparse compute: token-compacted QKV + FFN execution.
+
+The paper's headline claim is *end-to-end* sparsity -- SPLS predicts the
+attention pattern before QK generation so that QKV projection, attention,
+**and** the FFN all execute sparsely (Sec. III, Fig. 15).  This package is
+the TPU-native realization of that claim for static-shape execution:
+
+* :mod:`backend` -- the **compute-backend registry axis** (``dense`` |
+  ``packed_xla`` | ``packed_pallas``), mirroring the attention backend
+  registry (:mod:`repro.models.attn_backend`), so training/simulation and
+  serving select how token-compacted linear ops execute through one
+  dispatch;
+* :mod:`packed` -- packed execution of the linear ops: Q projection on
+  the critical-row union and the dense (gated) MLP on FFN-critical
+  tokens, with leader broadcast recovering full-length outputs.  The
+  ``packed_pallas`` backend fuses the row gather into the matmul's DMA
+  schedule (:mod:`repro.kernels.gathered_matmul`);
+* :mod:`capacity` -- the **capacity controller** that turns observed
+  critical-row counts into a small set of bucketed static capacities
+  (one jit per bucket -- XLA's static-shape discipline applied to the
+  ASIC's dynamic-allocation FIFO scheduler);
+* :mod:`accounting` -- analytic FLOPs (dense vs executed) per serving
+  prefill chunk, feeding the scheduler's lifetime-FLOPs accounting.
+
+The plan->compaction adapters live in :mod:`repro.core.sparse_exec`
+(:class:`~repro.core.sparse_exec.Compaction`, ``compact_rows``).
+"""
+
+from .accounting import chunk_flops
+from .backend import (AUTO, DENSE, available_compute_backends,
+                      get_compute_backend, is_packed,
+                      register_compute_backend, resolve_compute_backend)
+from .capacity import CapacityController
+from .packed import packed_mlp, packed_project_q
+
+__all__ = [
+    "AUTO", "DENSE", "available_compute_backends", "get_compute_backend",
+    "is_packed", "register_compute_backend", "resolve_compute_backend",
+    "CapacityController", "packed_mlp", "packed_project_q", "chunk_flops",
+]

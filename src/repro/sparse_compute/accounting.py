@@ -1,0 +1,66 @@
+"""Analytic FLOPs for serving prefill chunks: dense vs executed.
+
+Counts multiply-accumulates x2 (mul + add), the same convention as
+:mod:`repro.core.flops`, for the three components the paper sparsifies --
+QKV generation, attention score/value math, and the FFN -- as one
+serving prefill chunk executes them.  The engine feeds these into the
+scheduler's lifetime-FLOPs accounting so ``flops_saved_pct`` is tracked
+per component from real serving runs (Fig. 15's breakdown, measured on
+the serving path instead of derived from plan masks).
+
+Serving-specific honesty notes:
+
+* K/V projections and the output projection stay **dense** on the
+  prefill path -- every chunk row's K/V column must materialize until
+  the cross-chunk prune vote finalizes, and the out-projection input is
+  a per-row head mixture -- so only the Q share of "qkv" shrinks.
+* attention cost is the packed row count times *all columns seen so
+  far* (cross-chunk causal attention), for dense and packed alike.
+* padded chunk rows are charged like real rows: the engine executes
+  them (static shapes), and the dense baseline pays the same padding.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from repro.models.common import Activations
+
+__all__ = ["chunk_flops"]
+
+
+def chunk_flops(cfg, rows: int, cols: int, q_rows: Optional[int] = None,
+                ffn_rows: Optional[int] = None
+                ) -> Dict[str, Tuple[float, float]]:
+    """Per-chunk (dense, executed) FLOPs for qkv / attn / ffn.
+
+    rows: chunk rows executed (the static chunk size); cols: KV columns
+    attended (slots written so far, incl. this chunk); q_rows /
+    ffn_rows: packed capacities actually computed (None = dense).
+    Counts cover every attention block of the whole model (the paged
+    engine is attention-only).
+    """
+    D, KV, Dh = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
+    H = cfg.n_heads
+    n_attn = len(cfg.period) * cfg.n_periods
+    n_ffn = sum(1 for b in cfg.period if b.has_ffn) * cfg.n_periods
+    mult = 3 if Activations.gated(cfg.ffn_activation) else 2
+
+    q_rows = rows if q_rows is None else min(q_rows, rows)
+    ffn_rows = rows if ffn_rows is None else min(ffn_rows, rows)
+
+    def qkv(nq):
+        q = 2.0 * nq * D * H * Dh
+        kv = 2.0 * 2.0 * rows * D * KV * Dh       # K/V stay dense (vote)
+        wo = 2.0 * rows * H * Dh * D              # out-proj stays dense
+        return (q + kv + wo) * n_attn
+
+    def attn(nq):
+        return 2.0 * 2.0 * H * nq * cols * Dh * n_attn   # QK^T + AV
+
+    def ffn(nf):
+        return mult * 2.0 * nf * D * cfg.d_ff * n_ffn
+
+    return {"qkv": (qkv(rows), qkv(q_rows)),
+            "attn": (attn(rows), attn(q_rows)),
+            "ffn": (ffn(rows), ffn(ffn_rows))}
