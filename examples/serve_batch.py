@@ -36,13 +36,24 @@ def main():
     ap.add_argument("--s-threshold", type=float, default=0.6,
                     help="SPLS similarity threshold (higher -> more rows "
                          "similar -> more packed-compute savings)")
+    ap.add_argument("--vote-horizon", type=int, default=None,
+                    help="finalize the SPLS column prune vote after this "
+                         "many chunks instead of end-of-prefill "
+                         "(core.planner; 1 packs the K/V projection)")
+    ap.add_argument("--prune-vote", type=float, default=0.5,
+                    help="cross-head agreement fraction a column must win "
+                         "to keep its page slot (and, under a finite "
+                         "--vote-horizon, to keep its K/V projection)")
+    ap.add_argument("--k-ratio", type=float, default=0.25,
+                    help="SPLS row-wise top-k ratio (smaller -> sparser "
+                         "column votes -> more K/V pruning)")
     args = ap.parse_args()
 
     cfg = ArchConfig(
         name="serve-demo", n_layers=4, d_model=128, n_heads=8, n_kv_heads=4,
         head_dim=16, d_ff=512, vocab_size=512,
         period=(BlockCfg(mixer="attn"),), remat=False,
-        spls=SPLSConfig(enabled=args.spls, k_ratio=0.25,
+        spls=SPLSConfig(enabled=args.spls, k_ratio=args.k_ratio,
                         s_threshold=args.s_threshold,
                         f_threshold=3, window=8, causal=True))
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -50,7 +61,9 @@ def main():
                        max_len=args.prompt_len + args.max_new + 8,
                        page_size=args.page_size,
                        prefill_chunk=args.prefill_chunk,
-                       compute_backend=args.compute_backend)
+                       compute_backend=args.compute_backend,
+                       vote_horizon=args.vote_horizon,
+                       spls_prune_vote=args.prune_vote)
     eng = (PagedServingEngine if args.paged else ServingEngine)(
         cfg, params, scfg)
 
@@ -77,7 +90,7 @@ def main():
         fs = eng.stats["flops_saved_pct"]
         print(f"compute: backend={eng.stats['compute_backend']} "
               f"flops_saved qkv={fs['qkv']:.1f}% attn={fs['attn']:.1f}% "
-              f"ffn={fs['ffn']:.1f}%")
+              f"ffn={fs['ffn']:.1f}% kv={fs.get('kv', 0.0):.1f}%")
     assert all(r.done for r in reqs), "queue did not drain"
     assert len(done) == len(reqs)
     for r in reqs[:3]:

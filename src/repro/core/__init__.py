@@ -6,7 +6,10 @@ Public API:
   topk            -- row-wise top-k -> SPA + K/V column pruning
   similarity      -- fixed-window local similarity (critical/similar rows)
   mfi             -- Most-Frequent-Index FFN token sparsity
-  spls            -- end-to-end plan builder
+  spls            -- end-to-end plan builder (paper-reference raw-array API)
+  planner         -- the unified planner: PlanContext + every plan driver
+                     (exact / scan / progressive / streaming serving) and
+                     the horizon-finalized column-vote policy
   sparse_exec     -- simulation- and capacity-mode sparse execution
   flops           -- exact FLOPs accounting (Fig. 15 reproduction)
 """
@@ -20,6 +23,7 @@ from .topk import kv_keep_from_mask, row_topk_mask, sparsify_pam, topk_count
 from .similarity import LocalSimilarity, local_similarity, windowed_l1
 from .mfi import FFNSparsity, mfi_ffn_sparsity
 from .spls import SPLSConfig, SparsityPlan, build_plan, plan_stats
+from .planner import PlanContext
 from .sparse_exec import (gather_rows, pack_by_mask, spls_attention,
                           spls_attention_packed, spls_ffn, spls_ffn_packed,
                           unpack_by_leader)

@@ -1,0 +1,505 @@
+"""Unified SPLS planner: one subsystem behind every execution mode.
+
+Before this module, SPLS planning had forked into three near-copies --
+the exact dense plan (``models.blocks.build_block_plan``), the
+progressive row-block scan (``models.blocks.build_block_plan_chunked`` +
+``core.spls_chunked.chunked_plan_scan``), and the streaming serving plan
+inlined in ``serving.paged_model.paged_prefill_chunk_spls``.  Each new
+sparse-compute feature could only land on one of them.  This module
+collapses the forks: :class:`PlanContext` owns the quantized predictor
+state (head layouts, HLog quantization, the int8 code encoding of the
+paged predictor cache), window-aligned vote accumulation, and plan
+emission; the execution modes are thin drivers over it:
+
+* **simulation / training** -- :meth:`PlanContext.plan_exact` (the
+  offline exact-top-k plan) and :meth:`PlanContext.plan_progressive`
+  (streaming-reproducible numerics over the full sequence), both reached
+  through ``models.blocks.block_forward``;
+* **progressive long-sequence** -- :meth:`PlanContext.plan_scan`, the
+  ``lax.scan`` row-block driver (O(row_block * L) peak, never a full
+  PAM);
+* **streaming serving** -- :meth:`PlanContext.encode_pred_qk` /
+  :meth:`PlanContext.decode_pred_k` / :meth:`PlanContext.plan_block`,
+  driven one chunk at a time by
+  ``serving.paged_model.paged_prefill_chunk_spls``.
+
+All three emit *identical plans on identical predicted heads* (the
+``plan_block`` primitive in :mod:`repro.core.spls_chunked` is shared;
+pinned by ``tests/test_planner.py``).
+
+**Horizon-finalized column votes.**  The cross-head column-keep vote is
+monotone in rows: a head's "some row selected this column" bit only ever
+turns on as chunks arrive, so the cross-head agreement bar
+(``ceil(spls_prune_vote * H)`` heads, ``keep_from_votes``) is sticky
+once won.  Waiting for the last chunk reproduces the full-prefill vote
+exactly (``vote_horizon=None``), but forces every chunk row's K/V to
+materialize.  A finite ``vote_horizon = h`` finalizes a column as
+**pruned** once it has been votable for ``h`` consecutive chunks while
+still below that same bar.  Finalized columns are denied
+materialization and attention, but the prediction/vote pipeline itself
+stays horizon-independent (dead columns still occupy their top-k
+candidacy) -- the vote trajectory matches the end-of-prefill path's, so
+a larger horizon can only rescue columns, never lose them (the
+monotonicity the tests pin).  With ``h == 1`` the
+decision for a chunk's *own* columns lands before formal K/V generation
+(prediction precedes QKV -- the paper's Fig. 5a ordering), so the K/V
+projection itself runs packed over only the surviving columns
+(:func:`repro.sparse_compute.packed.packed_project_kv`).  Finite
+horizons trade bounded divergence (a later row that *would* have voted
+for a finalized column is denied it) for K/V projection FLOPs and
+earlier page frees; ``None`` is bit-for-bit today's end-of-prefill vote.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quantizers import _PROJECTORS, symmetric_quantize
+from .spls import SPLSConfig, SparsityPlan
+from .spls_chunked import (ChunkedPlan, ChunkPlanBlock, chunked_plan_scan,
+                           plan_chunk, plan_chunk_votes, votes_from_kv_any)
+from .topk import topk_count
+
+__all__ = [
+    "PlanContext", "build_block_plan", "build_block_plan_chunked",
+    "build_block_plan_progressive", "progressive_plan_blocks",
+    "own_column_keep", "pack_within_capacity", "horizon_update_live",
+    "votes_from_kv_any",
+]
+
+
+def _progressive_row_block(L: int, w: int) -> int:
+    """Row-block size for the progressive drivers: a window multiple, at
+    most ~512 rows (the PAM block is O(row_block * L) per head)."""
+    return max(w, (min(512, L) // w) * w)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanContext:
+    """Static planning context: SPLS hyper-parameters + head layout.
+
+    The single owner of how activations become predicted heads (which
+    quantization axis, which (KV', G') layout) and how plan blocks are
+    emitted from them.  Build one per (config, shard-mode) with
+    :meth:`for_config`; every driver below is a method so the paths can
+    never drift apart.
+    """
+
+    scfg: SPLSConfig
+    D: int
+    KV: int
+    G: int
+    Dh: int
+    causal: bool
+    mode: str = "structured"     # head layout: structured | flat
+
+    @classmethod
+    def for_config(cls, cfg, mode: Optional[str] = None) -> "PlanContext":
+        if mode is None:
+            from repro.models.attention import head_shard_mode
+            mode = head_shard_mode(cfg)
+        scfg = cfg.spls
+        if scfg.causal != cfg.causal:
+            scfg = dataclasses.replace(scfg, causal=cfg.causal)
+        return cls(scfg=scfg, D=cfg.d_model, KV=cfg.n_kv_heads,
+                   G=cfg.n_heads // cfg.n_kv_heads,
+                   Dh=cfg.resolved_head_dim, causal=cfg.causal, mode=mode)
+
+    # ------------------------------------------------------------------
+    # quantized predictor state
+    # ------------------------------------------------------------------
+
+    @property
+    def head_names(self) -> Tuple:
+        """Logical sharding axes of the two head dims (scan driver)."""
+        return (("heads", None) if self.mode == "flat"
+                else ("kv_heads", "qgroups"))
+
+    def _weights2d(self, p: dict) -> Tuple[jax.Array, jax.Array]:
+        wq = p["wq"].reshape(self.D, self.KV * self.G * self.Dh)
+        wk = p["wk"].reshape(self.D, self.KV * self.Dh)
+        return wq, wk
+
+    def _layout(self, qp: jax.Array, kp: jax.Array,
+                constrain: bool = False) -> Tuple[jax.Array, jax.Array]:
+        """(B, L, H*Dh)/(B, L, KV*Dh) predictions -> head layout
+        ``qh (B, KV', G', L, Dh)`` / ``kh (B, KV', L, Dh)``."""
+        KV, G, Dh = self.KV, self.G, self.Dh
+        B, L = qp.shape[0], qp.shape[1]
+        if self.mode == "flat":  # (B, H, 1, L, *) matching attention_forward
+            H = KV * G
+            qh = qp.reshape(B, L, H, Dh).transpose(0, 2, 1, 3)[:, :, None]
+            kh = jnp.repeat(kp.reshape(B, L, KV, Dh).transpose(0, 2, 1, 3),
+                            G, axis=1)
+            if constrain:
+                from repro.sharding.logical import constrain as _cn
+                qh = _cn(qh, ("batch", "heads", None, "seq", None))
+                kh = _cn(kh, ("batch", "heads", "seq", None))
+        else:
+            qh = qp.reshape(B, L, KV, G, Dh).transpose(0, 2, 3, 1, 4)
+            kh = kp.reshape(B, L, KV, Dh).transpose(0, 2, 1, 3)
+            if constrain:
+                from repro.sharding.logical import constrain as _cn
+                qh = _cn(qh, ("batch", "kv_heads", "qgroups", "seq", None))
+        return qh, kh
+
+    def predict_heads(self, p: dict, xn: jax.Array,
+                      act_axis: Optional[int] = -1,
+                      constrain: bool = False):
+        """Run the quantized prediction on the normalized block input and
+        return ``(qh, kh)`` in this context's head layout.
+
+        ``act_axis=-1`` (default) is the streaming-reproducible numerics
+        (per-token scales); ``act_axis=None`` the offline per-tensor
+        variant used by the exact driver.
+        """
+        from .predict import predict_qk
+        wq, wk = self._weights2d(p)
+        qp, kp = predict_qk(xn, wq, wk, self.scfg.quant_method,
+                            self.scfg.quant_bits, act_axis=act_axis)
+        return self._layout(qp, kp, constrain=constrain)
+
+    def encode_pred_qk(self, p: dict, xn: jax.Array):
+        """Streaming prediction with the K side emitted as int8 codes.
+
+        xn: (1, C, D) normalized chunk input (structured layout only).
+        Returns ``(qh (1, KV, G, C, Dh), k_codes (KV, C, Dh) int8,
+        k_scale (C,) float32)`` where
+        ``decode_pred_k(k_codes, k_scale)`` is **bit-for-bit** the
+        dequantized predicted K that :func:`repro.core.predict.predict_qk`
+        would return: the log-domain projection is deterministic on the
+        integer codes, so storing codes + per-token scale (the paged
+        predictor cache layout, -75% pool bytes at float32 compute dtype)
+        loses nothing.
+        """
+        assert self.mode == "structured", \
+            "the paged predictor cache keeps the structured layout"
+        scfg = self.scfg
+        if scfg.quant_bits > 8:
+            raise ValueError(
+                f"int8 predictor-cache codes require quant_bits <= 8, got "
+                f"{scfg.quant_bits}")
+        from .predict import predict_qk_pre
+        _, C, _ = xn.shape
+        wq, wk = self._weights2d(p)
+        q_pred, k_pre = predict_qk_pre(xn, wq, wk, scfg.quant_method,
+                                       scfg.quant_bits, act_axis=-1)
+        kq, kscale = symmetric_quantize(k_pre, bits=scfg.quant_bits,
+                                        axis=-1)       # (1, C, KV*Dh)
+        qh, _ = self._layout(q_pred, k_pre)  # kh side recomputed from codes
+        k_codes = kq.reshape(C, self.KV, self.Dh).transpose(1, 0, 2) \
+            .astype(jnp.int8)
+        return qh, k_codes, kscale.reshape(C).astype(jnp.float32)
+
+    def decode_pred_k(self, codes: jax.Array, scale: jax.Array,
+                      dtype=None) -> jax.Array:
+        """int8 codes (..., S, Dh) + per-token scale (..., S) -> the
+        dequantized predicted K heads, bit-for-bit the value the float
+        predictor cache used to store.
+
+        ``dtype`` must be the compute dtype the codes were encoded from:
+        the projected levels are exact in bf16 and the stored float32
+        scale is an exact widening of the compute-dtype scale, so casting
+        both *before* the multiply reproduces the compute-dtype product
+        exactly (a float32 multiply would differ in the last bf16 ulp and
+        flip marginal top-k columns).
+        """
+        proj = _PROJECTORS[self.scfg.quant_method](
+            codes.astype(jnp.float32), self.scfg.quant_bits)
+        if dtype is not None:
+            proj = proj.astype(dtype)
+            scale = scale.astype(dtype)
+        return proj * scale[..., None]
+
+    # ------------------------------------------------------------------
+    # plan emission
+    # ------------------------------------------------------------------
+
+    def plan_block(self, qh_blk: jax.Array, kh: jax.Array, *, k, row0,
+                   n_valid_rows, n_cols,
+                   col_live: Optional[jax.Array] = None) -> ChunkPlanBlock:
+        """One window-aligned plan block -- the unit every driver emits."""
+        return plan_chunk(qh_blk, kh, k=k, row0=row0,
+                          n_valid_rows=n_valid_rows, n_cols=n_cols,
+                          s_threshold=self.scfg.s_threshold,
+                          window=self.scfg.window,
+                          f_threshold=self.scfg.f_threshold,
+                          causal=self.causal, col_live=col_live)
+
+    def vote_block(self, qh_blk: jax.Array, kh: jax.Array, *, k, row0,
+                   n_valid_rows, n_cols,
+                   col_live: Optional[jax.Array] = None) -> jax.Array:
+        """Column-keep contribution only (skips the similarity stage)."""
+        return plan_chunk_votes(qh_blk, kh, k=k, row0=row0,
+                                n_valid_rows=n_valid_rows, n_cols=n_cols,
+                                causal=self.causal, col_live=col_live)
+
+    def row_block_for(self, L: int) -> int:
+        return _progressive_row_block(L, self.scfg.window)
+
+    def iter_blocks(self, p: dict, xn: jax.Array,
+                    row_block: Optional[int] = None,
+                    votes_only: bool = False) -> Iterator:
+        """Iterate the progressive planner's row blocks over a full
+        sequence -- the single place that owns the predicted-head layout,
+        the window-aligned row blocking, and the tail padding.  Both the
+        full plan assembly (:meth:`plan_progressive`) and the serving
+        vote path (``repro.serving.pager.spls_token_votes``) consume it,
+        so the two can never diverge.  Yields
+        :class:`~repro.core.spls_chunked.ChunkPlanBlock` per block, or
+        just the ``kv_any`` column-keep bools with ``votes_only=True``
+        (skipping the similarity stage, whose pairwise tensor is the
+        largest intermediate of a full block).
+        """
+        B, L, _ = xn.shape
+        qh, kh = self.predict_heads(p, xn, act_axis=-1)
+        w = self.scfg.window
+        rb = row_block or self.row_block_for(L)
+        assert rb % w == 0, (rb, w)
+        nblk = -(-L // rb)
+        pad = nblk * rb - L
+        if pad:
+            qh = jnp.pad(qh, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+        k = topk_count(L, self.scfg.k_ratio)
+        for i in range(nblk):
+            common = dict(k=k, row0=i * rb,
+                          n_valid_rows=min(rb, L - i * rb), n_cols=L)
+            q_blk = qh[..., i * rb:(i + 1) * rb, :]
+            if votes_only:
+                yield self.vote_block(q_blk, kh, **common)
+            else:
+                yield self.plan_block(q_blk, kh, **common)
+
+    def plan_progressive(self, p: dict, xn: jax.Array,
+                         row_block: Optional[int] = None) -> SparsityPlan:
+        """Full-sequence plan with streaming-reproducible numerics.
+
+        Exactly what a chunk-by-chunk streaming prefill reproduces
+        bit-for-bit (per-token quantization; row-local bisection top-k) --
+        the serving engines' parity oracle.
+        """
+        B, L, _ = xn.shape
+        blocks = list(self.iter_blocks(p, xn, row_block))
+        cat = lambda xs, ax: xs[0] if len(xs) == 1 else jnp.concatenate(xs, ax)
+        mask = cat([b.mask for b in blocks], -2)[..., :L, :]
+        q_crit = cat([b.q_critical for b in blocks], -1)[..., :L]
+        q_lead = cat([b.q_leader for b in blocks], -1)[..., :L]
+        kv_keep = blocks[0].kv_any
+        for b in blocks[1:]:
+            kv_keep = kv_keep | b.kv_any
+        if self.scfg.ffn_sparsity:
+            ffn_crit = cat([b.ffn_critical for b in blocks], -1)[..., :L]
+            ffn_lead = cat([b.ffn_leader for b in blocks], -1)[..., :L]
+        else:
+            ar = jnp.arange(L, dtype=jnp.int32)
+            ffn_crit = jnp.ones((B, L), bool)
+            ffn_lead = jnp.broadcast_to(ar, (B, L))
+        # attn_mask == mask & kv_keep[..., None, :] identically: any column
+        # a row's mask selects is by definition kept in that head, so the
+        # intersection is a no-op (this is also what makes simulation-mode
+        # execution reproducible row-locally by a streaming prefill).
+        return SparsityPlan(attn_mask=mask, q_critical=q_crit,
+                            q_leader=q_lead, kv_keep=kv_keep,
+                            ffn_critical=ffn_crit, ffn_leader=ffn_lead)
+
+    def plan_scan(self, p: dict, xn: jax.Array,
+                  row_block: Optional[int] = None) -> ChunkedPlan:
+        """Long-sequence driver: ``lax.scan`` over the shared plan-block
+        primitive; O(row_block * L) peak, plan-lite output (no O(L^2)
+        mask)."""
+        B, L, _ = xn.shape
+        qh, kh = self.predict_heads(p, xn, act_axis=None, constrain=True)
+        rb = row_block or self.row_block_for(L)
+        return chunked_plan_scan(
+            qh, kh, k_ratio=self.scfg.k_ratio,
+            s_threshold=self.scfg.s_threshold, window=self.scfg.window,
+            f_threshold=self.scfg.f_threshold, row_block=rb,
+            causal=self.scfg.causal, head_names=self.head_names)
+
+    def plan_exact(self, p: dict, xn: jax.Array) -> SparsityPlan:
+        """Offline exact driver: full PAM, exact top-k, per-tensor
+        quantization -- the accuracy-study numerics (the paper's Fig. 5a
+        as one shot).  Not streaming-reproducible; training/simulation
+        only."""
+        from repro.core import mfi as _mfi
+        from repro.core import similarity as _sim
+        from repro.core import topk as _topk
+        from repro.sharding.logical import constrain as _cn
+
+        scfg = self.scfg
+        B, L, _ = xn.shape
+        qh, kh = self.predict_heads(p, xn, act_axis=None, constrain=True)
+        pam = jnp.einsum("bkgqd,bkld->bkgql", qh, kh) * (self.Dh ** -0.5)
+        if scfg.causal:
+            neg = jnp.asarray(jnp.finfo(pam.dtype).min / 2, pam.dtype)
+            tri = jnp.tril(jnp.ones((L, L), dtype=bool))
+            pam = jnp.where(tri, pam, neg)
+
+        spa, mask = _topk.sparsify_pam(pam, scfg.k_ratio)
+        if scfg.causal:
+            tri = jnp.tril(jnp.ones((L, L), bool))
+            mask = mask & tri
+            spa = jnp.where(mask, spa, jnp.zeros_like(spa))
+        sim = _sim.local_similarity(spa, scfg.window, scfg.s_threshold)
+        kv_keep = _topk.kv_keep_from_mask(mask)
+        if scfg.ffn_sparsity:
+            # MFI votes across all H = KV*G heads
+            leaders_h = sim.leader.reshape(B, self.KV * self.G, L)
+            ffn = _mfi.mfi_ffn_sparsity(leaders_h, scfg.window,
+                                        scfg.f_threshold)
+            ffn_crit, ffn_leader = ffn.is_critical, ffn.leader
+        else:
+            ar = jnp.arange(L, dtype=jnp.int32)
+            ffn_crit = jnp.ones((B, L), bool)
+            ffn_leader = jnp.broadcast_to(ar, (B, L))
+        return SparsityPlan(attn_mask=mask & kv_keep[..., None, :],
+                            q_critical=sim.is_critical, q_leader=sim.leader,
+                            kv_keep=kv_keep, ffn_critical=ffn_crit,
+                            ffn_leader=ffn_leader)
+
+
+# ---------------------------------------------------------------------------
+# horizon-finalized column votes
+# ---------------------------------------------------------------------------
+
+def own_column_keep(kv_any: jax.Array, *, start, chunk: int, valid,
+                    last_keep, vote_need: int = 1) -> jax.Array:
+    """Keep decision for the *current* chunk's own columns (jit-side).
+
+    kv_any: (B, KV', G', S) this chunk's plan-block column votes; start /
+    valid: the chunk's slot window; last_keep: the prompt's final position
+    (always kept -- it anchors the decode continuation, mirroring
+    ``keep_from_votes``).  Returns (chunk,) bool: a new column survives
+    iff at least ``vote_need`` heads' rows selected it -- the same
+    cross-head agreement threshold the end-of-prefill prune vote applies
+    (``ceil(spls_prune_vote * H)``), evaluated on the chunk's own plan
+    block.  This is the ``vote_horizon == 1`` finalization, and it lands
+    *before* formal K/V generation (prediction precedes QKV, the paper's
+    Fig. 5a ordering) -- which is what lets the K/V projection skip the
+    pruned columns entirely.
+    """
+    # pad so the dynamic slice can never clamp-shift near the table tail
+    padded = jnp.pad(kv_any, [(0, 0)] * (kv_any.ndim - 1) + [(0, chunk)])
+    own = jax.lax.dynamic_slice_in_dim(padded, start, chunk, axis=-1)
+    idx = jnp.arange(chunk, dtype=jnp.int32)
+    hv = own.astype(jnp.int32).sum(axis=tuple(range(own.ndim - 1)))
+    keep = (hv >= vote_need) & (idx < valid)
+    return keep | (start + idx == last_keep)
+
+
+def pack_within_capacity(keep: jax.Array, capacity: int,
+                         anchor: Optional[jax.Array] = None) -> jax.Array:
+    """(C,) keep mask -> the subset that fits the static capacity in the
+    stable pack order (:func:`repro.core.sparse_exec.pack_by_mask`): the
+    n-th kept row occupies slot n-1.  Overflow columns are dropped from
+    the keep set entirely (never materialized, never attendable) -- the
+    capacity controller observes the overflow and escalates its bucket.
+
+    ``anchor`` (C,) marks the forced decode anchor (the prompt's final
+    position): when present-and-kept it is **reserved a slot** regardless
+    of its index position -- it is the highest index of the final chunk,
+    so plain pack order would drop it first on overflow, and a dropped
+    anchor is catastrophic (decode would run without the last prompt
+    token's K/V) where any other overflow merely degrades.  Non-anchor
+    columns are capped to ``capacity - 1`` in that case.
+    """
+    if anchor is None:
+        return keep & (jnp.cumsum(keep) - 1 < capacity)
+    anchor = anchor & keep
+    present = anchor.any().astype(jnp.int32)
+    others = keep & ~anchor
+    capped = others & (jnp.cumsum(others) - 1 < capacity - present)
+    return capped | anchor
+
+
+def horizon_update_live(live: np.ndarray, head_votes: np.ndarray, *,
+                        start: int, valid: int, chunk: int, horizon: int,
+                        last_keep: int, vote_need: int = 1,
+                        kv_capacity: Optional[int] = None) -> np.ndarray:
+    """Host-side liveness update after one streamed chunk's votes landed.
+
+    live: (S,) current live mask; head_votes: (S,) accumulated cross-head
+    keep-vote *counts* (layer 0, summed over heads).  A column that has
+    been votable for ``horizon`` consecutive chunks (its arrival chunk
+    included) while still below the cross-head agreement threshold
+    (``vote_need = ceil(spls_prune_vote * H)`` heads -- the same
+    criterion the end-of-prefill vote applies) is finalized as pruned;
+    once a column wins the threshold it can never be finalized (votes
+    are monotone, so the keep bit is sticky).  With ``kv_capacity``
+    given (the ``horizon == 1`` packed-K/V path), the current chunk's
+    own columns are additionally capped to the packed projection
+    capacity in pack order -- mirroring exactly what
+    :func:`own_column_keep` + :func:`pack_within_capacity` materialized
+    on device, so host bookkeeping and device state cannot disagree.
+    The prompt's final position (``last_keep``) is never finalized.
+    """
+    live = np.asarray(live).copy()
+    head_votes = np.asarray(head_votes)
+    S = live.shape[0]
+    sl = np.arange(S)
+    kept_by_vote = head_votes >= vote_need
+    if kv_capacity is not None and horizon == 1:
+        own = slice(start, min(start + chunk, S))
+        sl_own = sl[own]
+        anchor = sl_own == last_keep
+        keep_own = (kept_by_vote[own] | anchor) & (sl_own - start < valid)
+        anchor = anchor & keep_own
+        others = keep_own & ~anchor
+        written = (others & (np.cumsum(others) - 1
+                             < kv_capacity - int(anchor.any()))) | anchor
+        live[own] &= written
+        return live
+    cur = start // chunk
+    elapsed = cur - sl // chunk + 1
+    dead = (live & ~kept_by_vote & (sl < start + valid)
+            & (elapsed >= horizon) & (sl != last_keep))
+    live[dead] = False
+    return live
+
+
+# ---------------------------------------------------------------------------
+# compat drivers (the signatures models.blocks re-exports)
+# ---------------------------------------------------------------------------
+
+def build_block_plan(cfg, p: dict, xn: jax.Array) -> Optional[SparsityPlan]:
+    """Exact-top-k SPLS plan from the normalized block input (before QKV
+    generation; TP-friendly (B, KV, G, ...) layout).  ``p`` is the block
+    param dict (``p["attn"]`` holds the projection weights)."""
+    if not cfg.spls.enabled:
+        return None
+    return PlanContext.for_config(cfg).plan_exact(p["attn"], xn)
+
+
+def build_block_plan_chunked(cfg, p: dict, xn: jax.Array) -> ChunkedPlan:
+    """Progressive-generation plan for long sequences (O(row_block * L));
+    the ``lax.scan`` driver of the unified planner."""
+    ctx = PlanContext.for_config(cfg)
+    L = xn.shape[1]
+    return ctx.plan_scan(p["attn"], xn,
+                         row_block=max(ctx.scfg.window, min(512, L)))
+
+
+def build_block_plan_progressive(cfg, p: dict, xn: jax.Array,
+                                 row_block: Optional[int] = None
+                                 ) -> Optional[SparsityPlan]:
+    """Serving-mode SPLS plan: the numerics a *streaming* predictor can
+    reproduce exactly, assembled over the full sequence.  Returns ``None``
+    when SPLS is disabled."""
+    if not cfg.spls.enabled:
+        return None
+    return PlanContext.for_config(cfg).plan_progressive(p["attn"], xn,
+                                                        row_block)
+
+
+def progressive_plan_blocks(cfg, p: dict, xn: jax.Array,
+                            row_block: Optional[int] = None,
+                            votes_only: bool = False) -> Iterator:
+    """Iterate the progressive planner's row blocks for a full sequence
+    (see :meth:`PlanContext.iter_blocks`)."""
+    return PlanContext.for_config(cfg).iter_blocks(
+        p["attn"], xn, row_block=row_block, votes_only=votes_only)

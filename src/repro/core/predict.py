@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from .quantizers import quantize_dequantize
 
-__all__ = ["predict_qk", "predicted_attention", "split_heads"]
+__all__ = ["predict_qk", "predict_qk_pre", "predicted_attention",
+           "split_heads"]
 
 
 def split_heads(x: jax.Array, n_heads: int) -> jax.Array:
@@ -50,13 +51,31 @@ def predict_qk(x: jax.Array, wq: jax.Array, wk: jax.Array,
     "additional 8-bit quantization ... and the entire process is repeated"
     step of Sec. IV-B.
     """
+    q_pred, k_pre = predict_qk_pre(x, wq, wk, method, bits, act_axis)
+    # second-stage quantization of the predicted K
+    k_pred = quantize_dequantize(k_pre, method, bits, axis=act_axis)
+    return q_pred, k_pred
+
+
+def predict_qk_pre(x: jax.Array, wq: jax.Array, wk: jax.Array,
+                   method: str = "hlog", bits: int = 8,
+                   act_axis: Optional[int] = None):
+    """Prediction up to (but excluding) K's second-stage re-quantization.
+
+    Returns ``(q_pred, k_pre)``: ``q_pred`` fully quantized as in
+    :func:`predict_qk`; ``k_pre`` the predicted K *before* its
+    second-stage quantize-dequantize.  This is the seam the unified
+    planner's int8 predictor-cache encoder shares with :func:`predict_qk`
+    (:meth:`repro.core.planner.PlanContext.encode_pred_qk` symmetric-
+    quantizes ``k_pre`` into codes; decoding projects the codes back --
+    bit-for-bit ``quantize_dequantize(k_pre, ...)``), so the two paths
+    cannot drift.
+    """
     xq = quantize_dequantize(x, method, bits, axis=act_axis)
     q_pred = xq @ quantize_dequantize(wq, method, bits)
-    k_pred = xq @ quantize_dequantize(wk, method, bits)
-    # second-stage quantization of the predicted Q/K
+    k_pre = xq @ quantize_dequantize(wk, method, bits)
     q_pred = quantize_dequantize(q_pred, method, bits, axis=act_axis)
-    k_pred = quantize_dequantize(k_pred, method, bits, axis=act_axis)
-    return q_pred, k_pred
+    return q_pred, k_pre
 
 
 def predicted_attention(x: jax.Array, wq: jax.Array, wk: jax.Array,

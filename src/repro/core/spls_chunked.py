@@ -90,10 +90,20 @@ class ChunkPlanBlock(NamedTuple):
 
 def _block_pam_mask(qh_blk: jax.Array, kh: jax.Array, *, k, row0,
                     n_valid_rows, n_cols, causal: bool,
-                    scale: Optional[float]) -> Tuple[jax.Array, jax.Array]:
+                    scale: Optional[float],
+                    col_live: Optional[jax.Array] = None,
+                    constrain_names: Optional[Tuple] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
     """Shared PAM-block -> top-k mask stage of :func:`plan_chunk` (also
     used standalone by :func:`plan_chunk_votes`).  Returns
-    ``(mask (B,KV',G',C,S), pam32)``."""
+    ``(mask (B,KV',G',C,S), pam32)``.
+
+    ``col_live`` (S,) bool marks columns finalized as pruned by the
+    horizon vote (:mod:`repro.core.planner`): dead columns are filled like
+    causal/invalid ones, so they can neither win a top-k slot nor receive
+    further keep votes.  ``constrain_names`` threads the GSPMD sharding
+    hint the long-sequence scan driver needs (a no-op without rules).
+    """
     Dh = qh_blk.shape[-1]
     C = qh_blk.shape[-2]
     S = kh.shape[-2]
@@ -102,21 +112,31 @@ def _block_pam_mask(qh_blk: jax.Array, kh: jax.Array, *, k, row0,
     # bf16 storage halves plan-construction HBM traffic for free.
     pam = (jnp.einsum("bkgqd,bkld->bkgql", qh_blk, kh) * scale
            ).astype(jnp.bfloat16)
+    if constrain_names is not None:
+        from repro.sharding.logical import constrain
+        pam = constrain(pam, constrain_names)
     qi = row0 + jnp.arange(C)                       # global row positions
     kj = jnp.arange(S)                              # column slot == position
     cmask = kj[None, :] < n_cols
     if causal:
         cmask = cmask & (kj[None, :] <= qi[:, None])
+    if col_live is not None:
+        cmask = cmask & col_live[None, :]
     pam = jnp.where(cmask, pam, jnp.asarray(CAUSAL_FILL, pam.dtype))
     pam32 = pam.astype(jnp.float32)
     valid_rows = (jnp.arange(C) < n_valid_rows)
-    mask = bisect_topk_mask(pam32, k) & cmask & valid_rows[:, None]
+    mask = bisect_topk_mask(pam32, k)
+    if constrain_names is not None:
+        from repro.sharding.logical import constrain
+        mask = constrain(mask, constrain_names)
+    mask = mask & cmask & valid_rows[:, None]
     return mask, pam32
 
 
 def plan_chunk_votes(qh_blk: jax.Array, kh: jax.Array, *, k, row0,
                      n_valid_rows, n_cols, causal: bool = True,
-                     scale: Optional[float] = None) -> jax.Array:
+                     scale: Optional[float] = None,
+                     col_live: Optional[jax.Array] = None) -> jax.Array:
     """Column-keep contribution only: ``(B, KV', G', S)`` bool.
 
     The page-prune vote needs just the zero-column detection, not the
@@ -126,14 +146,16 @@ def plan_chunk_votes(qh_blk: jax.Array, kh: jax.Array, *, k, row0,
     block)."""
     mask, _ = _block_pam_mask(qh_blk, kh, k=k, row0=row0,
                               n_valid_rows=n_valid_rows, n_cols=n_cols,
-                              causal=causal, scale=scale)
+                              causal=causal, scale=scale, col_live=col_live)
     return jnp.any(mask, axis=-2)
 
 
 def plan_chunk(qh_blk: jax.Array, kh: jax.Array, *, k, row0,
                n_valid_rows, n_cols, s_threshold: float, window: int,
                f_threshold: int, causal: bool = True,
-               scale: Optional[float] = None) -> ChunkPlanBlock:
+               scale: Optional[float] = None,
+               col_live: Optional[jax.Array] = None,
+               constrain_names: Optional[Tuple] = None) -> ChunkPlanBlock:
     """SPLS plan for a single row block -- the progressive-generation unit.
 
     qh_blk: (B, KV', G', C, Dh) predicted q heads for rows
@@ -155,8 +177,13 @@ def plan_chunk(qh_blk: jax.Array, kh: jax.Array, *, k, row0,
     S = kh.shape[-2]
     mask, pam32 = _block_pam_mask(qh_blk, kh, k=k, row0=row0,
                                   n_valid_rows=n_valid_rows, n_cols=n_cols,
-                                  causal=causal, scale=scale)
+                                  causal=causal, scale=scale,
+                                  col_live=col_live,
+                                  constrain_names=constrain_names)
     spa = jnp.where(mask, pam32, jnp.zeros_like(pam32))
+    if constrain_names is not None:
+        from repro.sharding.logical import constrain
+        spa = constrain(spa, constrain_names)
     sim = local_similarity(spa, window, s_threshold,
                            valid_len=n_valid_rows)
     leader = sim.leader + row0                      # block-local -> global
@@ -217,51 +244,35 @@ def chunked_plan_scan(qh: jax.Array, kh: jax.Array, *, k_ratio: float,
     assert L % row_block == 0 and row_block % window == 0, (L, row_block)
     nblk = L // row_block
     k = topk_count(L, k_ratio)
-    scale = scale if scale is not None else Dh ** -0.5
 
     qb = qh.reshape(B, KVp, Gp, nblk, row_block, Dh).transpose(
         3, 0, 1, 2, 4, 5)  # (nblk, B, KV', G', R, Dh)
     offs = jnp.arange(nblk) * row_block
-
-    from repro.sharding.logical import constrain  # no-op without rules
     blk_names = ("batch",) + head_names + (None, None)
 
+    # one scan step == one progressive plan block: the same primitive the
+    # serving chunk step and the full-sequence progressive assembly drive
+    # (repro.core.planner), so the three paths cannot drift.  Only the
+    # plan-lite fields leave the scan -- the O(row_block * L) mask block
+    # stays transient (never stacked into an O(L^2) tensor).  MFI is
+    # window-local and row blocks are window multiples, so the per-block
+    # FFN structure concatenates into exactly the global vote.
     def body(kv_acc, inp):
         q_blk, r0 = inp                             # (B,KV',G',R,Dh)
-        # PAM block in bf16: the prediction is already 8-bit-quantized
-        # math, so bf16 storage halves plan-construction HBM traffic for
-        # free (measured -40% on the memory roofline term).
-        pam = (jnp.einsum("bkgqd,bkld->bkgql", q_blk, kh) * scale
-               ).astype(jnp.bfloat16)
-        pam = constrain(pam, blk_names)
-        if causal:
-            qi = r0 + jnp.arange(row_block)
-            kj = jnp.arange(L)
-            cmask = kj[None, :] <= qi[:, None]
-            pam = jnp.where(cmask, pam, jnp.asarray(CAUSAL_FILL, pam.dtype))
-        # threshold-based top-k via bisection (12 iterations; see
-        # bisect_topk_mask for why counting beats exact top_k under GSPMD)
-        pam32 = pam.astype(jnp.float32)
-        mask = bisect_topk_mask(pam32, k)
-        mask = constrain(mask, blk_names)
-        if causal:
-            mask = mask & cmask
-        spa = jnp.where(mask, pam32, jnp.zeros_like(pam32))
-        spa = constrain(spa, blk_names)
-        sim = local_similarity(spa, window, s_threshold)
-        kv_acc = kv_acc | jnp.any(mask, axis=-2)
-        # leaders are block-local -> lift to global row ids
-        return kv_acc, (sim.is_critical, sim.leader + r0)
+        pb = plan_chunk(q_blk, kh, k=k, row0=r0, n_valid_rows=row_block,
+                        n_cols=L, s_threshold=s_threshold, window=window,
+                        f_threshold=f_threshold, causal=causal, scale=scale,
+                        constrain_names=blk_names)
+        return kv_acc | pb.kv_any, (pb.q_critical, pb.q_leader,
+                                    pb.ffn_critical, pb.ffn_leader)
 
     kv0 = jnp.zeros((B, KVp, Gp, L), bool)
-    kv_keep, (crit_b, lead_b) = jax.lax.scan(body, kv0, (qb, offs))
+    kv_keep, (crit_b, lead_b, fcrit_b, flead_b) = jax.lax.scan(
+        body, kv0, (qb, offs))
     # (nblk, B, KV', G', R) -> (B, KV', G', L)
     q_crit = crit_b.transpose(1, 2, 3, 0, 4).reshape(B, KVp, Gp, L)
     q_lead = lead_b.transpose(1, 2, 3, 0, 4).reshape(B, KVp, Gp, L)
-
-    # MFI over all heads (votes on window-local offsets)
-    from .mfi import mfi_ffn_sparsity
-    leaders_h = q_lead.reshape(B, KVp * Gp, L)
-    ffn = mfi_ffn_sparsity(leaders_h, window, f_threshold)
+    ffn_crit = fcrit_b.transpose(1, 0, 2).reshape(B, L)
+    ffn_lead = flead_b.transpose(1, 0, 2).reshape(B, L)
     return ChunkedPlan(q_critical=q_crit, q_leader=q_lead, kv_keep=kv_keep,
-                       ffn_critical=ffn.is_critical, ffn_leader=ffn.leader)
+                       ffn_critical=ffn_crit, ffn_leader=ffn_lead)

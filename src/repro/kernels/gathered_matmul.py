@@ -12,7 +12,9 @@ makes for the block table:
   operand**;
 * each grid step's row panel is brought into VMEM by **per-row async
   copies** resolved against ``perm`` (the gather happens in the DMA
-  schedule; no ``(C, D)`` gathered copy ever lands in HBM);
+  schedule; no ``(C, D)`` gathered copy ever lands in HBM), pipelined
+  two-deep over a pair of DMA semaphores so row ``r + 1``'s copy is in
+  flight while row ``r``'s is awaited;
 * the MXU consumes the panel directly (K-slices of the VMEM panel), and
   the output tile accumulates across K steps exactly like
   ``hlog_qmatmul``.
@@ -54,12 +56,27 @@ def _gmm_kernel(perm_ref, x_hbm, w_ref, o_ref, xs, sem, *, bm, bk):
         # per-row DMA gather of this tile's source rows into the VMEM
         # panel: the row index comes from the scalar-prefetch operand, so
         # the gather is part of the DMA schedule (cf. paged_decode's
-        # block-table index maps, which gather at page granularity)
-        def body(r, carry):
+        # block-table index maps, which gather at page granularity).
+        # Double-buffered: row r+1's copy is issued before row r is
+        # awaited, so at steady state one DMA is always in flight behind
+        # the one being waited on (start/wait alternate between the two
+        # DMA semaphores; each row lands directly in its own panel slot,
+        # so only the semaphores rotate -- no staging copy).  Bitwise
+        # identical to the serialized gather: destinations are disjoint
+        # and the panel is fully awaited before the MXU reads it.
+        def dma(r, slot):
             src = perm_ref[i * bm + r]
-            cp = pltpu.make_async_copy(x_hbm.at[src], xs.at[r], sem)
-            cp.start()
-            cp.wait()
+            return pltpu.make_async_copy(x_hbm.at[src], xs.at[r],
+                                         sem.at[slot])
+
+        dma(0, 0).start()
+
+        def body(r, carry):
+            @pl.when(r + 1 < bm)
+            def _start_next():
+                dma(r + 1, (r + 1) % 2).start()
+
+            dma(r, r % 2).wait()
             return carry
 
         jax.lax.fori_loop(0, bm, body, 0)
@@ -90,7 +107,7 @@ def _gathered_matmul_padded(x: jax.Array, w: jax.Array, perm: jax.Array,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, perm: (i, j)),
         scratch_shapes=[
             pltpu.VMEM((bm, D), jnp.float32),              # gathered panel
-            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),      # double-buffered row copies
         ],
     )
     return pl.pallas_call(

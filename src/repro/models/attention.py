@@ -170,16 +170,28 @@ def _out_proj(cfg: ArchConfig, p: dict, o: jax.Array, mode: str) -> jax.Array:
 
 
 def _project_kv(cfg: ArchConfig, p: dict, x: jax.Array,
-                positions: jax.Array, mode: str = "structured"):
-    """K/V-only projection: x (B, L, D) -> k/v (B, KV, L, Dh) (structured).
+                positions: jax.Array, mode: str = "structured",
+                perm: Optional[jax.Array] = None,
+                compute_backend: str = "dense"):
+    """K/V-only projection seam: x (B, L, D) -> k/v (structured layout).
 
-    Row-for-row identical to the k/v half of :func:`_project_qkv`; the
-    serving packed-compute path uses it so every chunk row's K/V column
-    still materializes (the cross-chunk prune vote needs them all) while
-    Q runs packed on the critical-row union
-    (:func:`repro.sparse_compute.packed_project_q`).
+    Row-for-row identical to the k/v half of :func:`_project_qkv`.  The
+    seam dispatches on the **compute backend**: with ``perm`` (a packed
+    column subset from the horizon-finalized prune vote,
+    :mod:`repro.core.planner`) the projection runs packed through
+    :func:`repro.sparse_compute.packed.packed_project_kv` -- only the
+    surviving ``C = len(perm)`` columns are computed (``(1, KV, C, Dh)``
+    out, the ``gathered_matmul`` path) -- while ``perm=None`` keeps the
+    dense ``(B, KV, L, Dh)`` projection of every chunk row (required
+    until a vote finalizes; ``vote_horizon=None`` serving and all
+    non-serving callers).
     """
     assert mode == "structured", "packed serving keeps the structured layout"
+    if perm is not None:
+        from repro.sparse_compute.packed import packed_project_kv
+        assert x.shape[0] == 1, "packed K/V projection is per-sequence"
+        return packed_project_kv(cfg, p, x, positions.reshape(-1), perm,
+                                 compute_backend)
     Dh = cfg.resolved_head_dim
     k = jnp.einsum("bld,dkh->bklh", x, p["wk"])
     v = jnp.einsum("bld,dkh->bklh", x, p["wv"])

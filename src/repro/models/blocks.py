@@ -5,7 +5,9 @@ residual), with optional gemma2-style post-norms.  When SPLS is enabled and
 the mixer is attention, the block runs the paper's pipeline: the plan is
 built from the *normalized block input* and the attention projection weights
 -- i.e. prediction happens before QKV generation, exactly as in Fig. 5(a) --
-then attention and the FFN execute sparsely under the plan.
+then attention and the FFN execute sparsely under the plan.  All plan
+*construction* lives in the unified planner (:mod:`repro.core.planner`);
+this module selects a driver (``plan_mode``) and executes under the plan.
 
 SPLS applicability (DESIGN.md §Arch-applicability): attention-free (mamba)
 blocks have no PAM to predict, so SPLS does not apply to them; in hybrid
@@ -22,8 +24,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, BlockCfg
-from repro.core.spls import SparsityPlan, build_plan
 from repro.core.sparse_exec import spls_ffn, spls_ffn_packed
+# All SPLS plan construction lives in the unified planner
+# (repro.core.planner); these names are re-exported for compatibility --
+# this module only *selects* a driver and executes under the plan.
+from repro.core.planner import (build_block_plan, build_block_plan_chunked,
+                                build_block_plan_progressive,
+                                progressive_plan_blocks)
 from .attention import (KVCache, attention_decode, attention_forward,
                         init_attention, init_kv_cache)
 from .common import rms_norm
@@ -32,8 +39,8 @@ from .mamba import (MambaCache, init_mamba, init_mamba_cache, mamba_decode,
 from .moe import ffn_forward, init_ffn
 
 __all__ = ["init_block", "block_forward", "block_decode", "init_block_cache",
-           "build_block_plan", "build_block_plan_progressive",
-           "progressive_plan_blocks"]
+           "build_block_plan", "build_block_plan_chunked",
+           "build_block_plan_progressive", "progressive_plan_blocks"]
 
 
 def init_block(cfg: ArchConfig, blk: BlockCfg, key: jax.Array, dtype) -> dict:
@@ -58,228 +65,6 @@ def init_block_cache(cfg: ArchConfig, blk: BlockCfg, batch: int, max_len: int,
     if blk.mixer == "attn":
         return init_kv_cache(cfg, batch, max_len, dtype)
     return init_mamba_cache(cfg, batch, dtype)
-
-
-def build_block_plan(cfg: ArchConfig, p: dict, xn: jax.Array
-                     ) -> Optional[SparsityPlan]:
-    """Run SPLS prediction on the normalized block input (before QKV gen).
-
-    Plan tensors use the TP-friendly (B, KV, G, ...) head layout so the
-    whole prediction pipeline (HLog matmuls, top-k, windowed similarity)
-    shards over the same axes as the formal attention -- no resharding
-    between prediction and execution.
-    """
-    if not cfg.spls.enabled:
-        return None
-    import dataclasses
-
-    from repro.core import mfi as _mfi
-    from repro.core import similarity as _sim
-    from repro.core import topk as _topk
-    from repro.core.predict import predict_qk
-    from repro.sharding.logical import constrain as _cn
-
-    D, KV, Dh = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
-    G = cfg.n_heads // KV
-    B, L, _ = xn.shape
-    scfg = cfg.spls
-    if scfg.causal != cfg.causal:
-        scfg = dataclasses.replace(scfg, causal=cfg.causal)
-
-    from .attention import head_shard_mode
-    mode = head_shard_mode(cfg)
-    wq = p["attn"]["wq"].reshape(D, KV * G * Dh)
-    wk = p["attn"]["wk"].reshape(D, KV * Dh)
-    qp, kp = predict_qk(xn, wq, wk, scfg.quant_method, scfg.quant_bits)
-    if mode == "flat":  # (B, H, 1, L, *) layout matching attention_forward
-        H = KV * G
-        qh = qp.reshape(B, L, H, Dh).transpose(0, 2, 1, 3)[:, :, None]
-        kh = kp.reshape(B, L, KV, Dh).transpose(0, 2, 1, 3)
-        kh = jnp.repeat(kh, G, axis=1)
-        qh = _cn(qh, ("batch", "heads", None, "seq", None))
-        kh = _cn(kh, ("batch", "heads", "seq", None))
-    else:
-        qh = qp.reshape(B, L, KV, G, Dh).transpose(0, 2, 3, 1, 4)
-        kh = kp.reshape(B, L, KV, Dh).transpose(0, 2, 1, 3)
-        qh = _cn(qh, ("batch", "kv_heads", "qgroups", "seq", None))
-    pam = jnp.einsum("bkgqd,bkld->bkgql", qh, kh) * (Dh ** -0.5)
-    if scfg.causal:
-        neg = jnp.asarray(jnp.finfo(pam.dtype).min / 2, pam.dtype)
-        tri = jnp.tril(jnp.ones((L, L), dtype=bool))
-        pam = jnp.where(tri, pam, neg)
-
-    spa, mask = _topk.sparsify_pam(pam, scfg.k_ratio)
-    if scfg.causal:
-        tri = jnp.tril(jnp.ones((L, L), bool))
-        mask = mask & tri
-        spa = jnp.where(mask, spa, jnp.zeros_like(spa))
-    sim = _sim.local_similarity(spa, scfg.window, scfg.s_threshold)
-    kv_keep = _topk.kv_keep_from_mask(mask)
-    if scfg.ffn_sparsity:
-        # MFI votes across all H = KV*G heads
-        leaders_h = sim.leader.reshape(B, KV * G, L)
-        ffn = _mfi.mfi_ffn_sparsity(leaders_h, scfg.window, scfg.f_threshold)
-        ffn_crit, ffn_leader = ffn.is_critical, ffn.leader
-    else:
-        ar = jnp.arange(L, dtype=jnp.int32)
-        ffn_crit = jnp.ones((B, L), bool)
-        ffn_leader = jnp.broadcast_to(ar, (B, L))
-    return SparsityPlan(attn_mask=mask & kv_keep[..., None, :],
-                        q_critical=sim.is_critical, q_leader=sim.leader,
-                        kv_keep=kv_keep, ffn_critical=ffn_crit,
-                        ffn_leader=ffn_leader)
-
-
-def build_block_plan_chunked(cfg: ArchConfig, p: dict, xn: jax.Array):
-    """Progressive-generation plan for long sequences (O(row_block * L)).
-
-    Mirrors :func:`build_block_plan` but scans PAM row blocks -- the XLA
-    mapping of the paper's progressive generation scheme (Sec. IV-C).
-    """
-    from repro.core.predict import predict_qk
-    from repro.core.spls_chunked import chunked_plan_scan
-    from repro.sharding.logical import constrain as _cn
-    from .attention import head_shard_mode
-
-    D, KV, Dh = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
-    G = cfg.n_heads // KV
-    B, L, _ = xn.shape
-    scfg = cfg.spls
-    mode = head_shard_mode(cfg)
-    wq = p["attn"]["wq"].reshape(D, KV * G * Dh)
-    wk = p["attn"]["wk"].reshape(D, KV * Dh)
-    qp, kp = predict_qk(xn, wq, wk, scfg.quant_method, scfg.quant_bits)
-    if mode == "flat":
-        H = KV * G
-        qh = qp.reshape(B, L, H, Dh).transpose(0, 2, 1, 3)[:, :, None]
-        kh = jnp.repeat(kp.reshape(B, L, KV, Dh).transpose(0, 2, 1, 3),
-                        G, axis=1)
-        qh = _cn(qh, ("batch", "heads", None, "seq", None))
-        kh = _cn(kh, ("batch", "heads", "seq", None))
-    else:
-        qh = qp.reshape(B, L, KV, G, Dh).transpose(0, 2, 3, 1, 4)
-        kh = kp.reshape(B, L, KV, Dh).transpose(0, 2, 1, 3)
-        qh = _cn(qh, ("batch", "kv_heads", "qgroups", "seq", None))
-    head_names = (("heads", None) if mode == "flat"
-                  else ("kv_heads", "qgroups"))
-    return chunked_plan_scan(
-        qh, kh, k_ratio=scfg.k_ratio, s_threshold=scfg.s_threshold,
-        window=scfg.window, f_threshold=scfg.f_threshold,
-        row_block=max(scfg.window, min(512, L)), causal=scfg.causal,
-        head_names=head_names)
-
-
-def _progressive_row_block(L: int, w: int) -> int:
-    """Row-block size for the progressive planner: a window multiple, at
-    most ~512 rows (the PAM block is O(row_block * L) per head)."""
-    return max(w, (min(512, L) // w) * w)
-
-
-def progressive_plan_blocks(cfg: ArchConfig, p: dict, xn: jax.Array,
-                            row_block: Optional[int] = None,
-                            votes_only: bool = False):
-    """Iterate the progressive planner's row blocks for a full sequence.
-
-    The single place that owns the predicted-head layout (mirroring
-    :func:`head_shard_mode`), the window-aligned row blocking, and the
-    tail padding -- both the full plan assembly
-    (:func:`build_block_plan_progressive`) and the serving vote path
-    (``repro.serving.pager.spls_token_votes``) consume it, so the two can
-    never diverge.  Yields :class:`~repro.core.spls_chunked.ChunkPlanBlock`
-    per block, or just the ``kv_any`` column-keep bools with
-    ``votes_only=True`` (skipping the similarity stage, whose pairwise
-    tensor is the largest intermediate of a full block).
-    """
-    from repro.core.predict import predict_qk
-    from repro.core.spls_chunked import plan_chunk, plan_chunk_votes
-    from repro.core.topk import topk_count
-    from .attention import head_shard_mode
-
-    D, KV, Dh = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
-    G = cfg.n_heads // KV
-    B, L, _ = xn.shape
-    scfg = cfg.spls
-    mode = head_shard_mode(cfg)
-    wq = p["attn"]["wq"].reshape(D, KV * G * Dh)
-    wk = p["attn"]["wk"].reshape(D, KV * Dh)
-    qp, kp = predict_qk(xn, wq, wk, scfg.quant_method, scfg.quant_bits,
-                        act_axis=-1)
-    if mode == "flat":
-        H = KV * G
-        qh = qp.reshape(B, L, H, Dh).transpose(0, 2, 1, 3)[:, :, None]
-        kh = jnp.repeat(kp.reshape(B, L, KV, Dh).transpose(0, 2, 1, 3),
-                        G, axis=1)
-    else:
-        qh = qp.reshape(B, L, KV, G, Dh).transpose(0, 2, 3, 1, 4)
-        kh = kp.reshape(B, L, KV, Dh).transpose(0, 2, 1, 3)
-
-    w = scfg.window
-    rb = row_block or _progressive_row_block(L, w)
-    assert rb % w == 0, (rb, w)
-    nblk = -(-L // rb)
-    pad = nblk * rb - L
-    if pad:
-        qh = jnp.pad(qh, ((0, 0),) * 3 + ((0, pad), (0, 0)))
-    k = topk_count(L, scfg.k_ratio)
-    for i in range(nblk):
-        common = dict(k=k, row0=i * rb, n_valid_rows=min(rb, L - i * rb),
-                      n_cols=L, causal=cfg.causal)
-        q_blk = qh[..., i * rb:(i + 1) * rb, :]
-        if votes_only:
-            yield plan_chunk_votes(q_blk, kh, **common)
-        else:
-            yield plan_chunk(q_blk, kh, s_threshold=scfg.s_threshold,
-                             window=w, f_threshold=scfg.f_threshold,
-                             **common)
-
-
-def build_block_plan_progressive(cfg: ArchConfig, p: dict, xn: jax.Array,
-                                 row_block: Optional[int] = None
-                                 ) -> Optional[SparsityPlan]:
-    """Serving-mode SPLS plan: the numerics a *streaming* predictor can
-    reproduce exactly, assembled over the full sequence.
-
-    Differs from :func:`build_block_plan` in exactly the two ways required
-    for chunk-by-chunk reproducibility (the serving engines run this for
-    full prefills and :func:`repro.core.spls_chunked.plan_chunk` per chunk;
-    both must agree bit-for-bit):
-
-      * **per-token quantization** (``act_axis=-1`` in ``predict_qk``):
-        per-tensor scales depend on rows that have not arrived yet in a
-        streaming prefill;
-      * **bisection top-k** over scanned row blocks (never the full PAM --
-        O(row_block * L) peak) with a threshold that is row-local, so any
-        window-aligned blocking yields the same plan.
-
-    Returns ``None`` when SPLS is disabled.
-    """
-    if not cfg.spls.enabled:
-        return None
-    B, L, _ = xn.shape
-    scfg = cfg.spls
-    blocks = list(progressive_plan_blocks(cfg, p, xn, row_block))
-
-    cat = lambda xs, ax: xs[0] if len(xs) == 1 else jnp.concatenate(xs, ax)
-    mask = cat([b.mask for b in blocks], -2)[..., :L, :]
-    q_crit = cat([b.q_critical for b in blocks], -1)[..., :L]
-    q_lead = cat([b.q_leader for b in blocks], -1)[..., :L]
-    kv_keep = blocks[0].kv_any
-    for b in blocks[1:]:
-        kv_keep = kv_keep | b.kv_any
-    if scfg.ffn_sparsity:
-        ffn_crit = cat([b.ffn_critical for b in blocks], -1)[..., :L]
-        ffn_lead = cat([b.ffn_leader for b in blocks], -1)[..., :L]
-    else:
-        ar = jnp.arange(L, dtype=jnp.int32)
-        ffn_crit = jnp.ones((B, L), bool)
-        ffn_lead = jnp.broadcast_to(ar, (B, L))
-    # attn_mask == mask & kv_keep[..., None, :] identically: any column a
-    # row's mask selects is by definition kept in that head, so the
-    # intersection is a no-op (this is also what makes simulation-mode
-    # execution reproducible row-locally by a streaming prefill).
-    return SparsityPlan(attn_mask=mask, q_critical=q_crit, q_leader=q_lead,
-                        kv_keep=kv_keep, ffn_critical=ffn_crit,
-                        ffn_leader=ffn_lead)
 
 
 _SPLS_CHUNK_THRESHOLD = 8192

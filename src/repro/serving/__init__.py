@@ -8,8 +8,8 @@ page-pruning semantics.
 """
 
 from .pager import (NULL_PAGE, POS_SENTINEL, PagedKVCache, PagePool,
-                    init_paged_cache, init_pos_pages, init_pred_cache,
-                    spls_token_keep, spls_token_votes)
+                    PredKCache, init_paged_cache, init_pos_pages,
+                    init_pred_cache, spls_token_keep, spls_token_votes)
 from .paged_model import (compact_slots, paged_decode_step,
                           paged_prefill_chunk, paged_prefill_chunk_spls,
                           scatter_prefill)
@@ -17,7 +17,7 @@ from .scheduler import Scheduler, SchedulerConfig, SeqState
 from .engine import PagedServingEngine, Request, ServeConfig, ServingEngine
 
 __all__ = [
-    "NULL_PAGE", "POS_SENTINEL", "PagedKVCache", "PagePool",
+    "NULL_PAGE", "POS_SENTINEL", "PagedKVCache", "PagePool", "PredKCache",
     "init_paged_cache", "init_pos_pages", "init_pred_cache",
     "spls_token_keep", "spls_token_votes",
     "compact_slots", "paged_decode_step", "paged_prefill_chunk",

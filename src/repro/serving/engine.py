@@ -93,6 +93,17 @@ class ServeConfig:
     # estimate before bucket selection (sparse_compute.CapacityController)
     capacity_buckets: Optional[Tuple[int, ...]] = None
     capacity_margin: float = 1.25
+    # horizon-finalized column votes (repro.core.planner): None keeps
+    # the end-of-prefill prune vote bit-for-bit; a finite horizon h >= 1
+    # finalizes a column as pruned once it has been votable for h
+    # consecutive chunks while still below the cross-head agreement
+    # threshold (ceil(spls_prune_vote * H) heads -- the same bar the
+    # end-of-prefill vote applies, evaluated early; bounded divergence
+    # for K/V savings).  h == 1 with a packed compute backend
+    # additionally packs the K/V *projection* to the surviving columns
+    # -- the chunk's own plan votes land before formal QKV generation,
+    # so pruned columns are never projected at all.
+    vote_horizon: Optional[int] = None
 
 
 def _backend_for_site(name: Optional[str], *, decode: bool,
@@ -152,6 +163,12 @@ class ServingEngine(_SamplerMixin):
             warnings.warn(
                 "ServingEngine (dense fixed-slot) executes dense compute "
                 "only; the configured packed compute_backend applies to "
+                "PagedServingEngine's chunked SPLS prefill and is ignored "
+                "here", RuntimeWarning, stacklevel=2)
+        if scfg.vote_horizon is not None:
+            warnings.warn(
+                "ServingEngine prefills whole prompts with the "
+                "end-of-prefill prune vote; vote_horizon applies to "
                 "PagedServingEngine's chunked SPLS prefill and is ignored "
                 "here", RuntimeWarning, stacklevel=2)
         cfg_fwd, cfg_dec = cfg, cfg
@@ -301,6 +318,25 @@ class PagedServingEngine(_SamplerMixin):
         self._compute = resolve_compute_backend(
             scfg.compute_backend if scfg.compute_backend is not None
             else cfg.compute_backend, sparse=cfg.spls.enabled)
+        # horizon-finalized column votes (core.planner): a finite horizon
+        # needs the streaming chunked path AND page pruning (the horizon
+        # decision *is* a prune decision)
+        self._horizon = scfg.vote_horizon
+        # the horizon's early finalization applies the same cross-head
+        # agreement bar as the end-of-prefill vote (keep_from_votes)
+        self._vote_need = max(1, math.ceil(scfg.spls_prune_vote
+                                           * cfg.n_heads))
+        if self._horizon is not None:
+            if self._horizon < 1:
+                raise ValueError(
+                    f"vote_horizon must be >= 1 chunks (or None for the "
+                    f"end-of-prefill vote), got {self._horizon}")
+            if not (cfg.spls.enabled and self._prune and chunkable):
+                raise ValueError(
+                    "vote_horizon requires SPLS (cfg.spls.enabled), page "
+                    "pruning (ServeConfig.spls_page_prune) and a causal "
+                    "model (chunked prefill): the horizon finalizes the "
+                    "streaming prune vote early")
         cs = scfg.prefill_chunk
         if is_packed(self._compute):
             self._cap_q = CapacityController(
@@ -309,15 +345,25 @@ class PagedServingEngine(_SamplerMixin):
             self._cap_f = CapacityController(
                 cs, buckets=scfg.capacity_buckets,
                 margin=scfg.capacity_margin)
+            # K/V projection capacity: only meaningful at vote_horizon == 1
+            # (the only horizon whose decision precedes K/V generation)
+            self._cap_kv = (CapacityController(
+                cs, buckets=scfg.capacity_buckets,
+                margin=scfg.capacity_margin)
+                if self._horizon == 1 else None)
         else:
-            self._cap_q = self._cap_f = None
+            self._cap_q = self._cap_f = self._cap_kv = None
         self.sched = Scheduler(
             SchedulerConfig(n_slots=scfg.n_slots,
                             prefill_chunk=scfg.prefill_chunk,
                             max_prefills_per_tick=scfg.max_prefills_per_tick,
                             watermark=scfg.watermark),
             self.pool, scfg.max_len, chunkable=chunkable,
-            prune_aware=self._prune)
+            prune_aware=self._prune,
+            # packed compute: route whole prompts (<= one chunk) through
+            # the chunk path too, so short prompts get token compaction
+            # instead of silently running the dense full-prefill path
+            chunk_all=is_packed(self._compute))
 
         self.cache = init_paged_cache(cfg, n_pages, ps)
         self.pos_pages = init_pos_pages(n_pages, ps)
@@ -351,20 +397,36 @@ class PagedServingEngine(_SamplerMixin):
             lambda c, pp, tb, keep: compact_slots(c, pp, tb, keep),
             donate_argnums=(0, 1))
 
-    def _get_chunk_spls(self, cq: Optional[int], cf: Optional[int]):
-        """Jitted SPLS chunk step for one capacity-bucket pair (dense
-        compute uses the single ``(None, None)`` entry)."""
-        key = (cq, cf)
+    def _get_chunk_spls(self, cq: Optional[int], cf: Optional[int],
+                        ckv: Optional[int] = None, horizon: bool = False):
+        """Jitted SPLS chunk step for one capacity-bucket triple (dense
+        compute uses the single ``(None, None, None)`` entry); ``horizon``
+        adds the liveness-mask + decode-anchor operands of the
+        horizon-finalized vote."""
+        key = (cq, cf, ckv, horizon)
         fn = self._chunk_spls_jits.get(key)
         if fn is None:
             cfg, cb = self.cfg, self._compute
-            fn = jax.jit(
-                lambda p, c, pc, pp, tb, start, toks, valid, k:
-                paged_prefill_chunk_spls(cfg, p, c, pc, pp, tb, start,
-                                         toks, valid, k, q_capacity=cq,
-                                         ffn_capacity=cf,
-                                         compute_backend=cb),
-                donate_argnums=(1, 2, 3))
+            need = self._vote_need
+            if horizon:
+                fn = jax.jit(
+                    lambda p, c, pc, pp, tb, start, toks, valid, k, lv, lk:
+                    paged_prefill_chunk_spls(cfg, p, c, pc, pp, tb, start,
+                                             toks, valid, k, q_capacity=cq,
+                                             ffn_capacity=cf,
+                                             kv_capacity=ckv,
+                                             compute_backend=cb,
+                                             live=lv, last_keep=lk,
+                                             kv_vote_need=need),
+                    donate_argnums=(1, 2, 3))
+            else:
+                fn = jax.jit(
+                    lambda p, c, pc, pp, tb, start, toks, valid, k:
+                    paged_prefill_chunk_spls(cfg, p, c, pc, pp, tb, start,
+                                             toks, valid, k, q_capacity=cq,
+                                             ffn_capacity=cf,
+                                             compute_backend=cb),
+                    donate_argnums=(1, 2, 3))
             self._chunk_spls_jits[key] = fn
         return fn
 
@@ -380,6 +442,8 @@ class PagedServingEngine(_SamplerMixin):
         if self._cap_q is not None:
             out["capacity_q"] = dict(self._cap_q.stats)
             out["capacity_ffn"] = dict(self._cap_f.stats)
+        if self._cap_kv is not None:
+            out["capacity_kv"] = dict(self._cap_kv.stats)
         return out
 
     def submit(self, req: Request) -> None:
@@ -441,6 +505,7 @@ class PagedServingEngine(_SamplerMixin):
         chunk = np.zeros((cs,), np.int32)
         chunk[:valid] = st.tokens[start:start + valid]
         if self.cfg.spls.enabled:
+            from repro.core.planner import horizon_update_live
             from repro.core.topk import topk_count
             if self.pred_cache is None:
                 self.pred_cache = init_pred_cache(self.cfg, self._n_pages,
@@ -450,23 +515,46 @@ class PagedServingEngine(_SamplerMixin):
             cq = self._cap_q.capacity() if packed else None
             cf = (self._cap_f.capacity()
                   if packed and self.cfg.spls.ffn_sparsity else None)
+            ckv = (self._cap_kv.capacity()
+                   if self._cap_kv is not None else None)
+            horizon = self._horizon
+            S = self.pages_per_seq * self.page_size
+            last_keep = st.prompt_len - 1
+            args = [self.params, self.cache, self.pred_cache,
+                    self.pos_pages, jnp.asarray(self._table_row(st)),
+                    jnp.asarray(start, jnp.int32),
+                    jnp.asarray(chunk)[None, :],
+                    jnp.asarray(valid, jnp.int32), jnp.asarray(k, jnp.int32)]
+            if horizon is not None:
+                if st.live is None:
+                    st.live = np.ones((S,), bool)
+                args += [jnp.asarray(st.live),
+                         jnp.asarray(last_keep, jnp.int32)]
             (logits, self.cache, self.pred_cache, self.pos_pages,
-             kv_any, counts) = self._get_chunk_spls(cq, cf)(
-                self.params, self.cache, self.pred_cache, self.pos_pages,
-                jnp.asarray(self._table_row(st)),
-                jnp.asarray(start, jnp.int32), jnp.asarray(chunk)[None, :],
-                jnp.asarray(valid, jnp.int32), jnp.asarray(k, jnp.int32))
+             kv_any, counts) = self._get_chunk_spls(
+                cq, cf, ckv, horizon is not None)(*args)
             if self._prune:
                 # cross-chunk vote accumulator: a head's "some row kept
                 # this column" bit only ever turns on, so OR is exact
                 votes = np.asarray(kv_any).reshape(self.cfg.n_heads, -1)
                 st.head_votes = (votes if st.head_votes is None
                                  else st.head_votes | votes)
+            if horizon is not None:
+                # finalize columns whose probation expired below the
+                # cross-head vote threshold (and mirror the device's
+                # kv_capacity pack decision for this chunk's own columns
+                # -- core.planner owns both)
+                st.live = horizon_update_live(
+                    st.live, st.head_votes.sum(axis=0), start=start,
+                    valid=valid, chunk=cs, horizon=horizon,
+                    last_keep=last_keep, vote_need=self._vote_need,
+                    kv_capacity=ckv)
             if packed:
                 # the host readback of the critical counts syncs on the
                 # chunk step; only the packed path pays it (dense compute
                 # discards the counts and stays fully async)
-                n_q, n_f = (int(v) for v in np.asarray(counts).max(axis=0))
+                n_q, n_f, n_kv = (int(v)
+                                  for v in np.asarray(counts).max(axis=0))
                 self._cap_q.observe(n_q)
                 if n_q > cq:
                     self._cap_q.note_overflow()
@@ -474,8 +562,13 @@ class PagedServingEngine(_SamplerMixin):
                     self._cap_f.observe(n_f)
                     if n_f > cf:
                         self._cap_f.note_overflow()
+                if ckv is not None:
+                    self._cap_kv.observe(n_kv)
+                    if n_kv > ckv:
+                        self._cap_kv.note_overflow()
             self.sched.note_flops(chunk_flops(
-                self.cfg, cs, start + valid, q_rows=cq, ffn_rows=cf))
+                self.cfg, cs, start + valid, q_rows=cq, ffn_rows=cf,
+                kv_rows=ckv))
         else:
             logits, self.cache, self.pos_pages = self._chunk(
                 self.params, self.cache, self.pos_pages,
@@ -504,6 +597,12 @@ class PagedServingEngine(_SamplerMixin):
         votes = st.head_votes.sum(axis=0).astype(np.int32)
         keep = keep_from_votes(votes[:Lp], self.cfg.n_heads,
                                self.scfg.spls_prune_vote)
+        if st.live is not None:
+            # horizon-finalized columns are gone even if they gathered
+            # votes later could not reach them; and a voted own-column the
+            # kv_capacity pack dropped was never materialized -- the final
+            # keep set must honor both (the decode anchor stays live)
+            keep &= st.live[:Lp]
         n_kept = int(keep.sum())
         keep_slots = np.zeros((S,), bool)
         keep_slots[:Lp] = keep

@@ -256,52 +256,76 @@ def paged_prefill_chunk_spls(cfg: ArchConfig, params, cache, pred_cache,
                              valid: jax.Array, topk_k: jax.Array,
                              q_capacity: Optional[int] = None,
                              ffn_capacity: Optional[int] = None,
-                             compute_backend: str = "dense"):
+                             kv_capacity: Optional[int] = None,
+                             compute_backend: str = "dense",
+                             live: Optional[jax.Array] = None,
+                             last_keep: Optional[jax.Array] = None,
+                             kv_vote_need: int = 1):
     """One SPLS prompt chunk for a single sequence (B = 1).
 
-    The streaming realization of the progressive generation scheme: every
-    layer (1) extends its paged *predictor* cache with the chunk's
-    HLog-predicted K heads, (2) builds a plan block for the chunk's rows
-    against every column seen so far (:func:`plan_chunk`: bisection top-k
-    with a *traced* ``topk_k = ceil(k_ratio * Lp)``, so one jit covers
-    every prompt length; O(chunk * S) memory, never a full PAM), and
-    (3) executes the chunk rows in simulation-mode SPLS -- leader-row
-    recovery plus the intra-row mask -- over all written KV slots.  The
-    math is row-for-row identical to the progressive full-prefill path
-    (``prefill(..., plan_mode="progressive")``), which is what makes
-    chunked and whole-prompt serving agree bit-for-bit.
+    The streaming driver of the unified planner
+    (:class:`repro.core.planner.PlanContext`): every layer (1) extends its
+    paged *predictor* cache with the chunk's predicted K heads as int8
+    codes + per-token scale (``PlanContext.encode_pred_qk``; dequantized
+    on read, bit-for-bit), (2) emits a plan block for the chunk's rows
+    against every column seen so far (``PlanContext.plan_block``:
+    bisection top-k with a *traced* ``topk_k``, so one jit covers every
+    prompt length; O(chunk * S) memory, never a full PAM), and (3)
+    executes the chunk rows in simulation-mode SPLS over all written KV
+    slots.  The math is row-for-row identical to the progressive
+    full-prefill path (``prefill(..., plan_mode="progressive")``), which
+    is what makes chunked and whole-prompt serving agree bit-for-bit.
 
     Chunks must be window-aligned (``start`` and the chunk size multiples
     of ``cfg.spls.window``) so similarity windows coincide with the
-    unchunked pipeline's.  Columns are *not* pruned here -- the cross-head
-    page-prune vote only finalizes with the last chunk (votes are monotone
-    in rows), after which the engine runs :func:`compact_slots`.
+    unchunked pipeline's.
 
     **End-to-end sparse compute** (``compute_backend`` ``"packed_xla"`` /
     ``"packed_pallas"``, static capacities ``q_capacity`` /
     ``ffn_capacity``): the Q projection and attention run only on the
     *cross-head union* of critical rows packed to ``q_capacity`` (leaders
     broadcast to their followers through the compaction's read slots), and
-    the FFN runs only on FFN-critical rows packed to ``ffn_capacity`` --
-    the serving realization of the paper's end-to-end sparsity.  K/V
-    projections stay dense: every chunk row's column must materialize
-    until the cross-chunk prune vote finalizes.  At full capacities the
-    packed path is bit-for-bit the dense (``"dense"``) path; below them,
-    overflow rows fall back to their window leader
-    (:func:`repro.core.sparse_exec.compact_rows`).
+    the FFN runs only on FFN-critical rows packed to ``ffn_capacity``.
+    At full capacities the packed path is bit-for-bit the dense
+    (``"dense"``) path; below them, overflow rows fall back to their
+    window leader (:func:`repro.core.sparse_exec.compact_rows`).
+
+    **Horizon-finalized column votes** (``live`` / ``kv_capacity`` /
+    ``last_keep``; see :mod:`repro.core.planner`): ``live`` (S,) marks
+    columns the engine's finite ``vote_horizon`` already finalized as
+    pruned -- they are denied attention (masked out of every layer's
+    score block), while the prediction/vote pipeline itself stays
+    horizon-independent so the vote trajectory matches the
+    end-of-prefill path's (the monotonicity the tests pin).  With ``kv_capacity`` set (the
+    ``vote_horizon == 1`` mode), layer 0's plan block additionally
+    decides which of the chunk's *own* columns won the cross-head
+    keep vote (``kv_vote_need`` agreeing heads -- the engine passes
+    ``ceil(spls_prune_vote * H)``, the same bar the end-of-prefill vote
+    applies) **before** formal K/V generation; only those (packed to
+    ``kv_capacity``, plus the forced ``last_keep`` anchor) are projected
+    and written -- the K/V-projection share of the paper's end-to-end
+    sparsity.  All layers share layer 0's decision (a page slot is shared
+    by every layer, exactly like the end-of-prefill prune vote).  With
+    ``live=None`` and ``kv_capacity=None`` the path is bit-for-bit
+    today's end-of-prefill vote: every column materializes until the vote
+    finalizes with the last chunk, after which the engine runs
+    :func:`compact_slots`.
 
     Returns ``(logits (1, 1, V), new_cache, new_pred_cache, new_pos_pages,
     kv_any, crit_counts)`` with ``kv_any (1, KV, G, S)`` layer 0's per-head
     column-keep contribution for the engine's vote accumulator and
-    ``crit_counts (n_periods, 2)`` the per-period max of (union-critical
-    rows, FFN-critical rows) -- the capacity controller's observations.
+    ``crit_counts (n_periods, 3)`` the per-period max of (union-critical
+    rows, FFN-critical rows, vote-surviving own columns) -- the capacity
+    controllers' observations.
     """
     assert cfg.causal, "chunked prefill needs causal attention"
-    from repro.core.predict import predict_qk
+    from repro.core.planner import (PlanContext, own_column_keep,
+                                    pack_within_capacity)
     from repro.core.sparse_exec import (_masked_softmax, compact_rows,
-                                        gather_rows)
-    from repro.core.spls_chunked import plan_chunk
+                                        gather_rows, pack_by_mask)
     from repro.sparse_compute import is_packed, packed_project_q
+
+    from .pager import PredKCache
 
     _, CS = tokens.shape
     if CS % cfg.spls.window:
@@ -312,14 +336,19 @@ def paged_prefill_chunk_spls(cfg: ArchConfig, params, cache, pred_cache,
             f"reproduce the full-prefill plan (set "
             f"ServeConfig.auto_align_chunk=True to round up automatically)")
     packed = is_packed(compute_backend)
+    if kv_capacity is not None:
+        assert packed, "kv_capacity rides on a packed compute backend"
+        assert live is not None and last_keep is not None, \
+            "kv_capacity needs the liveness mask and the decode anchor"
     Cq = min(q_capacity or CS, CS)
     Cf = min(ffn_capacity or CS, CS)
+    Ckv = min(kv_capacity, CS) if kv_capacity is not None else None
     N, ps = pos_pages.shape
     S = table.shape[0] * ps
-    D, KV, Dh = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
-    G = cfg.n_heads // KV
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
     scfg = cfg.spls
     dtype = dtype_of(cfg.compute_dtype)
+    ctx = PlanContext.for_config(cfg, mode="structured")
 
     sl, flat, pos_pages = _chunk_slots(table, pos_pages, start, valid, CS)
     positions = sl[None, :]
@@ -328,30 +357,40 @@ def paged_prefill_chunk_spls(cfg: ArchConfig, params, cache, pred_cache,
 
     x = embed_inputs(cfg, params, tokens)
 
-    def scan_body(x, inp):
-        pparams, pcache, ppred = inp
+    def scan_body(carry, inp):
+        if Ckv is not None:
+            x, kv_written_c, live_all_c, n_kv_c = carry
+        else:
+            x = carry
+            kv_written_c = live_all_c = n_kv_c = None
+        pparams, pcache, ppred, p_idx = inp
         pparams = _cast_params(pparams, dtype)
         new_caches, new_preds = [], []
         kv_any0 = None
-        counts = jnp.zeros((2,), jnp.int32)
+        counts = jnp.zeros((3,), jnp.int32)
         ridx = jnp.arange(CS, dtype=jnp.int32)
-        for blk, bp, kc, pk in zip(cfg.period, pparams, pcache, ppred):
+        for bi, (blk, bp, kc, pk) in enumerate(
+                zip(cfg.period, pparams, pcache, ppred)):
             xn = rms_norm(x, bp["ln1"], cfg.norm_eps)
-            # -- prediction: extend the predictor pages, plan this block
-            wq2 = bp["attn"]["wq"].reshape(D, KV * G * Dh)
-            wk2 = bp["attn"]["wk"].reshape(D, KV * Dh)
-            qp, kp = predict_qk(xn, wq2, wk2, scfg.quant_method,
-                                scfg.quant_bits, act_axis=-1)
-            kp_h = kp.reshape(CS, KV, Dh).transpose(1, 0, 2)  # (KV, CS, Dh)
-            pk = pk.reshape(KV, N * ps, Dh).at[:, flat].set(kp_h) \
-                .reshape(KV, N, ps, Dh)
-            kh_all = pk[:, table].reshape(KV, S, Dh)[None]
-            qh = qp.reshape(1, CS, KV, G, Dh).transpose(0, 2, 3, 1, 4)
-            pb = plan_chunk(qh, kh_all, k=topk_k, row0=start,
-                            n_valid_rows=valid, n_cols=n_valid,
-                            s_threshold=scfg.s_threshold,
-                            window=scfg.window,
-                            f_threshold=scfg.f_threshold, causal=True)
+            # -- prediction: extend the predictor code pages, emit the
+            # plan block (all plan math lives in core.planner)
+            qh, k_codes, k_scale = ctx.encode_pred_qk(bp["attn"], xn)
+            codes_pg = pk.codes.reshape(KV, N * ps, Dh).at[:, flat] \
+                .set(k_codes).reshape(KV, N, ps, Dh)
+            scale_pg = pk.scale.reshape(N * ps).at[flat].set(k_scale) \
+                .reshape(N, ps)
+            pk = PredKCache(codes=codes_pg, scale=scale_pg)
+            kh_all = ctx.decode_pred_k(codes_pg[:, table].reshape(KV, S, Dh),
+                                       scale_pg[table].reshape(S),
+                                       dtype=dtype)[None]
+            # the prediction/vote pipeline is deliberately horizon-
+            # independent (no col_live): finalized columns are denied
+            # materialization and attention below, but still occupy their
+            # top-k candidacy -- this keeps the vote trajectory identical
+            # to the end-of-prefill path's, which is what makes the kept
+            # set monotone in the horizon
+            pb = ctx.plan_block(qh, kh_all, k=topk_k, row0=start,
+                                n_valid_rows=valid, n_cols=n_valid)
             if kv_any0 is None:
                 kv_any0 = pb.kv_any
             lead_local = pb.q_leader - start
@@ -360,25 +399,72 @@ def paged_prefill_chunk_spls(cfg: ArchConfig, params, cache, pred_cache,
             # report FFN-critical but never count)
             crit_any = jnp.any(pb.q_critical, axis=(1, 2))     # (1, CS)
             n_ffn = (pb.ffn_critical[0] & (ridx < valid)).sum()
-            counts = jnp.maximum(
-                counts, jnp.stack([crit_any.sum(), n_ffn]).astype(jnp.int32))
-            # -- formal K/V at original positions for *every* chunk row
-            # (columns must materialize until the prune vote finalizes);
-            # Q packed to the critical-row union when a packed compute
-            # backend is active, dense otherwise
+            if Ckv is not None and bi == 0:
+                # layer 0 decides which of this chunk's own columns get a
+                # K/V projection at all (vote_horizon == 1: the chunk's
+                # own plan votes are final); later layers and periods
+                # reuse the carried decision -- lax.cond runs the
+                # decision exactly once per chunk
+                def _decide(_):
+                    ok = own_column_keep(
+                        pb.kv_any, start=start, chunk=CS, valid=valid,
+                        last_keep=last_keep, vote_need=kv_vote_need)
+                    anchor = start + ridx == last_keep
+                    w = pack_within_capacity(ok, Ckv, anchor=anchor)
+                    live_new = jax.lax.dynamic_update_slice(
+                        jnp.pad(live, (0, CS)), w, (start,))[:S]
+                    return w, live_new, ok.sum().astype(jnp.int32)
+
+                kv_written_c, live_all_c, n_kv_c = jax.lax.cond(
+                    p_idx == 0, _decide,
+                    lambda _: (kv_written_c, live_all_c, n_kv_c), None)
+            if Ckv is not None:
+                counts = jnp.maximum(counts, jnp.stack(
+                    [crit_any.sum(), n_ffn, n_kv_c]).astype(jnp.int32))
+            else:
+                counts = jnp.maximum(counts, jnp.stack(
+                    [crit_any.sum(), n_ffn,
+                     jnp.zeros((), jnp.int32)]).astype(jnp.int32))
+            # -- formal K/V at original positions.  Dense for every chunk
+            # row by default (columns must materialize until the prune
+            # vote finalizes); under vote_horizon == 1 the project_kv
+            # seam runs packed over only the vote-surviving columns.
             if packed:
-                k_new, v_new = project_kv(cfg, bp["attn"], xn, positions,
-                                          "structured")
+                if Ckv is not None:
+                    # pack order over the anchor-reserved written set: at
+                    # most Ckv True rows, so every written column lands
+                    # in the perm (filler slots scatter to the null page)
+                    kv_perm, _ = pack_by_mask(kv_written_c, Ckv)
+                    k_new, v_new = project_kv(
+                        cfg, bp["attn"], xn, positions, "structured",
+                        perm=kv_perm, compute_backend=compute_backend)
+                    flat_kv = jnp.where(jnp.take(kv_written_c, kv_perm),
+                                        jnp.take(flat, kv_perm), 0)
+                    kc = _write_chunk_kv(kc, k_new, v_new, flat_kv)
+                else:
+                    k_new, v_new = project_kv(cfg, bp["attn"], xn,
+                                              positions, "structured")
+                    kc = _write_chunk_kv(kc, k_new, v_new, flat)
             else:
                 q, k_new, v_new = project_qkv(cfg, bp["attn"], xn,
                                               positions, "structured")
-            kc = _write_chunk_kv(kc, k_new, v_new, flat)
+                kc = _write_chunk_kv(kc, k_new, v_new, flat)
             kg = kc.k_pages[:, table][None].reshape(1, KV, S, Dh)
             vg = kc.v_pages[:, table][None].reshape(1, KV, S, Dh)
             mask = pb.mask
             if blk.window is not None:
                 mask = mask & (positions[0][:, None] - slot_idx[None, :]
                                < blk.window)
+            if Ckv is not None:
+                # columns finalized dead (earlier chunks) or dropped by
+                # the kv pack (this chunk's own) were never projected /
+                # are pruned: deny them to every layer's attention
+                mask = mask & live_all_c
+            elif live is not None:
+                # finite horizon without K/V packing: earlier-finalized
+                # columns are pruned; this chunk's own columns always
+                # materialize
+                mask = mask & live
             # row selection: the two modes differ only in *which* q/mask
             # rows the shared score/softmax/AV block sees.
             if packed:
@@ -421,10 +507,20 @@ def paged_prefill_chunk_spls(cfg: ArchConfig, params, cache, pred_cache,
                               compute_backend=compute_backend)
             new_caches.append(kc)
             new_preds.append(pk)
-        return x, (tuple(new_caches), tuple(new_preds), kv_any0, counts)
+        carry_out = ((x, kv_written_c, live_all_c, n_kv_c)
+                     if Ckv is not None else x)
+        return carry_out, (tuple(new_caches), tuple(new_preds), kv_any0,
+                           counts)
 
-    x, (new_cache, new_pred, kv_any, counts) = jax.lax.scan(
-        scan_body, x, (params["periods"], cache, pred_cache))
+    if Ckv is not None:
+        carry0 = (x, jnp.zeros((CS,), bool), live, jnp.zeros((), jnp.int32))
+    else:
+        carry0 = x
+    carry, (new_cache, new_pred, kv_any, counts) = jax.lax.scan(
+        scan_body, carry0,
+        (params["periods"], cache, pred_cache,
+         jnp.arange(cfg.n_periods, dtype=jnp.int32)))
+    x = carry[0] if Ckv is not None else carry
     x_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
     return (head_logits(cfg, params, x_last), new_cache, new_pred,
             pos_pages, jax.tree.map(lambda a: a[0], kv_any), counts)

@@ -32,9 +32,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["NULL_PAGE", "POS_SENTINEL", "PagedKVCache", "PagePool",
-           "init_paged_cache", "init_pos_pages", "init_pred_cache",
-           "keep_from_votes", "spls_token_keep", "spls_token_votes"]
+__all__ = ["NULL_PAGE", "POS_SENTINEL", "PagedKVCache", "PredKCache",
+           "PagePool", "init_paged_cache", "init_pos_pages",
+           "init_pred_cache", "keep_from_votes", "spls_token_keep",
+           "spls_token_votes"]
 
 NULL_PAGE = 0
 # pos_pages filler for never-written slots.  Correctness never rests on it:
@@ -52,6 +53,27 @@ class PagedKVCache(NamedTuple):
 
     k_pages: jax.Array
     v_pages: jax.Array
+
+
+class PredKCache(NamedTuple):
+    """One period block's paged SPLS predictor cache, stored as **int8
+    HLog codes + per-token scale** instead of dequantized values.
+
+    codes: ``(n_periods, KV, n_pages, ps, Dh)`` int8 symmetric
+    quantization codes of the predicted K heads; scale:
+    ``(n_periods, n_pages, ps)`` float32 per-token quantization scale
+    (per-token scales are what make the streaming predictor reproducible,
+    so one scalar per slot covers all ``KV * Dh`` code elements).  The
+    planner dequantizes on read
+    (:meth:`repro.core.planner.PlanContext.decode_pred_k`) bit-for-bit to
+    the value the old float cache stored -- the log-domain projection is
+    deterministic on integer codes -- at 1 byte/element + 4 bytes/slot
+    instead of 4 bytes/element (float32 compute dtype: ~-75% pred-cache
+    pool bytes; bf16: ~-50%).
+    """
+
+    codes: jax.Array
+    scale: jax.Array
 
 
 class PagePool:
@@ -153,26 +175,31 @@ def init_pos_pages(n_pages: int, page_size: int) -> jax.Array:
 
 
 def init_pred_cache(cfg, n_pages: int, page_size: int):
-    """Paged SPLS predictor cache: per attention block, the HLog-predicted
-    K heads of every written slot -- one ``(n_periods, KV, n_pages, ps,
-    Dh)`` array per period block, page-parallel with the KV pool (same
-    block table, same flat slots).
+    """Paged SPLS predictor cache: per attention block, the predicted K
+    heads of every written slot as int8 codes + per-token scale
+    (:class:`PredKCache`), page-parallel with the KV pool (same block
+    table, same flat slots).
 
     This is what makes chunked prefill's per-chunk plan construction
     O(chunk * L): each chunk's plan block scores the chunk's predicted Q
     rows against *every previously seen column's* predicted K without
-    recomputing earlier chunks.  Only allocated when SPLS is enabled
-    (costs one extra K-sized array per layer, ~+50% pool bytes; an int8
-    code layout would cut that to +12.5% -- future work).
+    recomputing earlier chunks.  Only allocated when SPLS is enabled; the
+    int8 code layout cuts the extra pool bytes to ~a quarter of the KV
+    dtype's (one code byte per element plus one float32 scale per slot).
     """
-    from repro.models.common import dtype_of
-
-    dtype = dtype_of(cfg.compute_dtype)
     KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    if cfg.spls.quant_bits > 8:
+        raise ValueError(
+            f"int8 predictor-cache codes require spls.quant_bits <= 8, "
+            f"got {cfg.spls.quant_bits}")
 
     def one_block(blk):
         assert blk.mixer == "attn", "paged cache covers attention blocks only"
-        return jnp.zeros((cfg.n_periods, KV, n_pages, page_size, Dh), dtype)
+        return PredKCache(
+            codes=jnp.zeros((cfg.n_periods, KV, n_pages, page_size, Dh),
+                            jnp.int8),
+            scale=jnp.zeros((cfg.n_periods, n_pages, page_size),
+                            jnp.float32))
 
     return tuple(one_block(blk) for blk in cfg.period)
 
@@ -187,15 +214,15 @@ def spls_token_votes(cfg, params, prompt: jax.Array) -> jax.Array:
     Runs the paper's SPLS prediction (HLog PAM -> bisection top-k ->
     zero-column detection) on the layer-0 normalized input and counts how
     many of the H = KV*G heads retain each column.  Routed through the
-    *progressive* planner (:func:`repro.core.spls_chunked.plan_chunk` over
+    unified planner's progressive driver
+    (:meth:`repro.core.planner.PlanContext.iter_blocks` over
     window-aligned row blocks, per-token quantization): peak memory is
     O(row_block * Lp) -- the dense O(Lp^2) plan is never materialized --
     and the votes are bit-identical to what the streaming chunked-prefill
     predictor accumulates chunk by chunk, for any chunking.  Pure and
     jit-safe; the engine jits it once per prompt shape.
     """
-    from repro.core.spls_chunked import votes_from_kv_any
-    from repro.models.blocks import progressive_plan_blocks
+    from repro.core.planner import progressive_plan_blocks, votes_from_kv_any
     from repro.models.common import dtype_of, rms_norm
 
     dtype = dtype_of(cfg.compute_dtype)

@@ -68,6 +68,9 @@ class SeqState:
     prefilled: int = 0             # prompt tokens processed
     head_votes: Optional[object] = None  # (H, S) bool cross-chunk SPLS
     #                                      column-keep accumulator
+    live: Optional[object] = None  # (S,) bool horizon-vote liveness (None
+    #                                until the first chunk under a finite
+    #                                vote_horizon; see core.planner)
 
     @property
     def prompt_len(self) -> int:
@@ -81,7 +84,7 @@ class SeqState:
 class Scheduler:
     def __init__(self, cfg: SchedulerConfig, pool: PagePool,
                  max_len: int, chunkable: bool = True,
-                 prune_aware: bool = False):
+                 prune_aware: bool = False, chunk_all: bool = False):
         self.cfg = cfg
         self.pool = pool
         self.max_len = max_len
@@ -89,6 +92,13 @@ class Scheduler:
         # disables it for non-causal models (SPLS configs now stream their
         # plan chunk by chunk instead of bypassing chunking)
         self.chunkable = chunkable
+        # route *every* prefill through the chunk path, including whole
+        # prompts (<= one chunk): the packed-compute engine sets this so
+        # short prompts get the same token-compacted QKV/FFN execution as
+        # long ones instead of silently running the dense full-prefill
+        # path (outputs are identical either way -- chunked-vs-full parity
+        # is test-pinned -- only the executed FLOPs differ)
+        self.chunk_all = chunk_all and chunkable
         # SPLS page pruning: track observed kept/prompt ratios (EMA) so
         # page-need accounting can use a post-prune estimate instead of
         # assuming dense footprints; conservative (dense) fallback until
@@ -111,10 +121,13 @@ class Scheduler:
     # ------------------------------------------------------------------
     def note_flops(self, comp: dict) -> None:
         """Accumulate one prefill step's (dense, executed) FLOPs per
-        component (``{"qkv": (dense, executed), ...}``)."""
+        component (``{"qkv": (dense, executed), ...}``).  Components not
+        seen before (e.g. the standalone ``kv`` share of the
+        horizon-finalized K/V packing) are added on first observation."""
         for c, (dense, executed) in comp.items():
-            self.flops[c][0] += dense
-            self.flops[c][1] += executed
+            acc = self.flops.setdefault(c, [0.0, 0.0])
+            acc[0] += dense
+            acc[1] += executed
 
     def flops_saved_pct(self) -> dict:
         """Lifetime percent of dense-equivalent FLOPs *not* executed,
@@ -201,7 +214,8 @@ class Scheduler:
         return admitted
 
     def use_chunks(self, prompt_len: int) -> bool:
-        return self.chunkable and prompt_len > self.cfg.prefill_chunk
+        return self.chunkable and (prompt_len > self.cfg.prefill_chunk
+                                   or self.chunk_all)
 
     def plan_prefills(self) -> List[SeqState]:
         """Prefill-phase sequences to advance this tick, oldest first."""

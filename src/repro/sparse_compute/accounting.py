@@ -10,10 +10,12 @@ the serving path instead of derived from plan masks).
 
 Serving-specific honesty notes:
 
-* K/V projections and the output projection stay **dense** on the
-  prefill path -- every chunk row's K/V column must materialize until
-  the cross-chunk prune vote finalizes, and the out-projection input is
-  a per-row head mixture -- so only the Q share of "qkv" shrinks.
+* the output projection stays **dense** on the prefill path (its input
+  is a per-row head mixture); the K/V projections stay dense *unless*
+  the horizon-finalized prune vote is active with ``vote_horizon == 1``
+  (``kv_rows``): only then are a chunk's own pruned columns skipped
+  before projection (:mod:`repro.core.planner`).  The ``kv`` component
+  reports that share on its own so the saving is attributable.
 * attention cost is the packed row count times *all columns seen so
   far* (cross-chunk causal attention), for dense and packed alike.
 * padded chunk rows are charged like real rows: the engine executes
@@ -30,15 +32,18 @@ __all__ = ["chunk_flops"]
 
 
 def chunk_flops(cfg, rows: int, cols: int, q_rows: Optional[int] = None,
-                ffn_rows: Optional[int] = None
+                ffn_rows: Optional[int] = None,
+                kv_rows: Optional[int] = None
                 ) -> Dict[str, Tuple[float, float]]:
-    """Per-chunk (dense, executed) FLOPs for qkv / attn / ffn.
+    """Per-chunk (dense, executed) FLOPs for qkv / attn / ffn / kv.
 
     rows: chunk rows executed (the static chunk size); cols: KV columns
     attended (slots written so far, incl. this chunk); q_rows /
-    ffn_rows: packed capacities actually computed (None = dense).
-    Counts cover every attention block of the whole model (the paged
-    engine is attention-only).
+    ffn_rows / kv_rows: packed capacities actually computed (None =
+    dense).  ``kv`` is the K/V-projection share reported standalone
+    (it is also folded into ``qkv`` for the combined view).  Counts
+    cover every attention block of the whole model (the paged engine is
+    attention-only).
     """
     D, KV, Dh = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
     H = cfg.n_heads
@@ -48,12 +53,15 @@ def chunk_flops(cfg, rows: int, cols: int, q_rows: Optional[int] = None,
 
     q_rows = rows if q_rows is None else min(q_rows, rows)
     ffn_rows = rows if ffn_rows is None else min(ffn_rows, rows)
+    kv_rows = rows if kv_rows is None else min(kv_rows, rows)
 
-    def qkv(nq):
+    def kv(nkv):
+        return 2.0 * 2.0 * nkv * D * KV * Dh * n_attn    # K and V projections
+
+    def qkv(nq, nkv):
         q = 2.0 * nq * D * H * Dh
-        kv = 2.0 * 2.0 * rows * D * KV * Dh       # K/V stay dense (vote)
         wo = 2.0 * rows * H * Dh * D              # out-proj stays dense
-        return (q + kv + wo) * n_attn
+        return (q + wo) * n_attn + kv(nkv)
 
     def attn(nq):
         return 2.0 * 2.0 * H * nq * cols * Dh * n_attn   # QK^T + AV
@@ -61,6 +69,7 @@ def chunk_flops(cfg, rows: int, cols: int, q_rows: Optional[int] = None,
     def ffn(nf):
         return mult * 2.0 * nf * D * cfg.d_ff * n_ffn
 
-    return {"qkv": (qkv(rows), qkv(q_rows)),
+    return {"qkv": (qkv(rows, rows), qkv(q_rows, kv_rows)),
             "attn": (attn(rows), attn(q_rows)),
-            "ffn": (ffn(rows), ffn(ffn_rows))}
+            "ffn": (ffn(rows), ffn(ffn_rows)),
+            "kv": (kv(rows), kv(kv_rows))}

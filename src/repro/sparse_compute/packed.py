@@ -29,7 +29,7 @@ from repro.models.common import Activations, apply_rope, rms_norm, rope_freqs
 
 from .backend import get_compute_backend
 
-__all__ = ["packed_project_q", "packed_mlp"]
+__all__ = ["packed_project_q", "packed_project_kv", "packed_mlp"]
 
 
 def packed_project_q(cfg, p: dict, xn: jax.Array, positions: jax.Array,
@@ -55,6 +55,37 @@ def packed_project_q(cfg, p: dict, xn: jax.Array, positions: jax.Array,
     pos_p = jnp.take(positions, perm)[None, :]           # (1, C)
     sin, cos = rope_freqs(pos_p, Dh, cfg.rope_theta)
     return apply_rope(q, sin[:, None, None], cos[:, None, None])
+
+
+def packed_project_kv(cfg, p: dict, xn: jax.Array, positions: jax.Array,
+                      perm: jax.Array, backend: str):
+    """Project K/V for a packed column subset (B = 1, structured layout).
+
+    xn: (1, L, D) normalized block input; positions: (L,) original slot
+    ids; perm: (C,) packed source rows (the horizon-finalized keep
+    decision of :func:`repro.core.planner.own_column_keep`, packed by
+    :func:`repro.core.sparse_exec.pack_by_mask`).  Returns
+    ``(k, v)`` of shape ``(1, KV, C, Dh)`` whose slot ``c`` is
+    bit-for-bit row ``perm[c]`` of
+    :func:`repro.models.attention.project_kv`'s dense output (einsum row
+    subset + row-wise k-norm/RoPE at the original positions) -- the
+    parity tests pin this.  This is the K/V half of the paper's
+    end-to-end sparsity: columns the horizon vote finalized as pruned are
+    never projected at all.
+    """
+    D, KV, Dh = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
+    C = perm.shape[0]
+    be = get_compute_backend(backend)
+    kg = be.gathered_matmul(xn[0], p["wk"].reshape(D, KV * Dh), perm)
+    vg = be.gathered_matmul(xn[0], p["wv"].reshape(D, KV * Dh), perm)
+    k = kg.reshape(1, C, KV, Dh).transpose(0, 2, 1, 3).astype(xn.dtype)
+    v = vg.reshape(1, C, KV, Dh).transpose(0, 2, 1, 3).astype(xn.dtype)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    pos_p = jnp.take(positions, perm)[None, :]           # (1, C)
+    sin, cos = rope_freqs(pos_p, Dh, cfg.rope_theta)
+    k = apply_rope(k, sin[:, None], cos[:, None])
+    return k, v
 
 
 def packed_mlp(cfg, p: dict, x: jax.Array, comp: Compaction,
