@@ -112,5 +112,40 @@ def run():
     rows.append(("kernel/local_similarity/64x512", us_ref,
                  {"max_err_vs_oracle": round(err, 6)}))
 
+    # gathered matmul: double-buffered vs serialized row-DMA gather.
+    # Both variants are bitwise equal to the XLA x[perm] @ w oracle; the
+    # timed pair isolates what the two-semaphore DMA pipeline buys.  On
+    # CPU both run interpret-mode (parity only); on TPU they compile and
+    # the timing delta is the measurement ROADMAP carries forward.  The
+    # dispatch is wrapped in jax.profiler.TraceAnnotation
+    # ("gathered_matmul/{buffered,serialized}"), so a jax.profiler trace
+    # of this benchmark names each variant on the TPU timeline.
+    from repro.kernels import gathered_matmul
+
+    L, D, F, C = 512, 256, 256, 128
+    x = jax.random.normal(jax.random.PRNGKey(10), (L, D))
+    w = jax.random.normal(jax.random.PRNGKey(11), (D, F))
+    perm = jax.random.randint(jax.random.PRNGKey(12), (C,), 0, L)
+    interp = jax.default_backend() != "tpu"
+    base = jax.jit(lambda a, b, p: a[p] @ b)(x, w, perm)
+    gm_us = {}
+    for db in (True, False):
+        def call(a, b, p, db=db):
+            return gathered_matmul(a, b, p, interpret=interp,
+                                   double_buffer=db)
+        us = time_call(call, x, w, perm)
+        tag = "buffered" if db else "serialized"
+        gm_us[tag] = us
+        err = float(jnp.max(jnp.abs(call(x, w, perm) - base)))
+        rows.append((f"kernel/gathered_matmul/{tag}/C{C}_D{D}_F{F}", us,
+                     {"max_err_vs_oracle": err,
+                      "timing": "interpret (CPU)" if interp else "jit"}))
+    rows.append(("kernel/gathered_matmul/dma_overlap_summary", 0.0, {
+        "us_buffered": round(gm_us["buffered"], 1),
+        "us_serialized": round(gm_us["serialized"], 1),
+        "overlap_speedup_x": round(
+            gm_us["serialized"] / max(gm_us["buffered"], 1e-9), 3),
+        "timing": "interpret (CPU)" if interp else "jit"}))
+
     rows.extend(_backend_rows())
     return rows

@@ -47,7 +47,29 @@ def main():
     ap.add_argument("--k-ratio", type=float, default=0.25,
                     help="SPLS row-wise top-k ratio (smaller -> sparser "
                          "column votes -> more K/V pruning)")
+    ap.add_argument("--capacity-margin", type=float, default=1.25,
+                    help="capacity-controller safety margin over the EMA "
+                         "estimate (1.0 = tightest buckets)")
+    ap.add_argument("--prompt-repeat", type=int, default=None,
+                    metavar="N",
+                    help="make prompts repetitive: token i of every "
+                         "prompt is drawn from an N-token motif pool "
+                         "resampled every N positions (adjacent rows "
+                         "become locally similar, so the SPLS packed "
+                         "path actually sparsifies -- random prompts "
+                         "barely do)")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable the serving telemetry (no-op sinks; "
+                         "back-compat stats counters keep working)")
+    ap.add_argument("--bench-json", default=None, metavar="PATH",
+                    help="write the telemetry-derived BENCH_serving.json "
+                         "report to PATH (requires telemetry)")
+    ap.add_argument("--trace-json", default=None, metavar="PATH",
+                    help="write the Chrome trace (open in "
+                         "https://ui.perfetto.dev) to PATH")
     args = ap.parse_args()
+    if args.bench_json and args.no_telemetry:
+        ap.error("--bench-json needs telemetry (drop --no-telemetry)")
 
     cfg = ArchConfig(
         name="serve-demo", n_layers=4, d_model=128, n_heads=8, n_kv_heads=4,
@@ -63,14 +85,26 @@ def main():
                        prefill_chunk=args.prefill_chunk,
                        compute_backend=args.compute_backend,
                        vote_horizon=args.vote_horizon,
-                       spls_prune_vote=args.prune_vote)
+                       spls_prune_vote=args.prune_vote,
+                       capacity_margin=args.capacity_margin,
+                       telemetry=not args.no_telemetry)
     eng = (PagedServingEngine if args.paged else ServingEngine)(
         cfg, params, scfg)
 
     reqs = []
     for i in range(args.requests):
-        prompt = jax.random.randint(jax.random.PRNGKey(100 + i),
-                                    (args.prompt_len,), 0, cfg.vocab_size)
+        if args.prompt_repeat:
+            import numpy as np
+            n = args.prompt_repeat
+            motifs = np.asarray(jax.random.randint(
+                jax.random.PRNGKey(100 + i),
+                (args.prompt_len // n + 1,), 0, cfg.vocab_size))
+            prompt = jax.numpy.asarray(
+                np.repeat(motifs, n)[:args.prompt_len], jax.numpy.int32)
+        else:
+            prompt = jax.random.randint(jax.random.PRNGKey(100 + i),
+                                        (args.prompt_len,), 0,
+                                        cfg.vocab_size)
         r = Request(rid=i, prompt=prompt, max_new_tokens=args.max_new)
         reqs.append(r)
         eng.submit(r)
@@ -93,6 +127,25 @@ def main():
               f"ffn={fs['ffn']:.1f}% kv={fs.get('kv', 0.0):.1f}%")
     assert all(r.done for r in reqs), "queue did not drain"
     assert len(done) == len(reqs)
+    if args.bench_json:
+        from repro.observability import serving_report, write_report
+
+        report = serving_report(eng, wall_s=dt, extra={
+            "workload": {"requests": args.requests,
+                         "prompt_len": args.prompt_len,
+                         "max_new": args.max_new,
+                         "prompt_repeat": args.prompt_repeat}})
+        write_report(args.bench_json, report)
+        lat = report["latency"]
+        print(f"wrote {args.bench_json} "
+              f"(ttft_p50={lat['ttft_ms']['p50']:.1f}ms "
+              f"tpot_p50={lat['tpot_ms']['p50']:.2f}ms)")
+    if args.trace_json:
+        eng.telemetry.trace.validate()
+        eng.telemetry.trace.write(args.trace_json)
+        print(f"wrote {args.trace_json} "
+              f"({len(eng.telemetry.trace.events)} events; open in "
+              f"https://ui.perfetto.dev)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.output}")
 

@@ -420,7 +420,8 @@ def pack_within_capacity(keep: jax.Array, capacity: int,
 def horizon_update_live(live: np.ndarray, head_votes: np.ndarray, *,
                         start: int, valid: int, chunk: int, horizon: int,
                         last_keep: int, vote_need: int = 1,
-                        kv_capacity: Optional[int] = None) -> np.ndarray:
+                        kv_capacity: Optional[int] = None,
+                        metrics=None) -> np.ndarray:
     """Host-side liveness update after one streamed chunk's votes landed.
 
     live: (S,) current live mask; head_votes: (S,) accumulated cross-head
@@ -437,6 +438,13 @@ def horizon_update_live(live: np.ndarray, head_votes: np.ndarray, *,
     :func:`own_column_keep` + :func:`pack_within_capacity` materialized
     on device, so host bookkeeping and device state cannot disagree.
     The prompt's final position (``last_keep``) is never finalized.
+
+    ``metrics`` (optional) is a duck-typed
+    :class:`~repro.observability.metrics.MetricsRegistry`: this function
+    is the only place that knows whether a column died to the vote
+    horizon or to the kv-capacity pack, so it owns the
+    ``spls/horizon_finalized_cols`` / ``spls/horizon_kv_capacity_drops``
+    counters.
     """
     live = np.asarray(live).copy()
     head_votes = np.asarray(head_votes)
@@ -452,12 +460,25 @@ def horizon_update_live(live: np.ndarray, head_votes: np.ndarray, *,
         others = keep_own & ~anchor
         written = (others & (np.cumsum(others) - 1
                              < kv_capacity - int(anchor.any()))) | anchor
+        if metrics is not None:
+            newly_dead = live[own] & ~written
+            n_vote = int((newly_dead & ~keep_own).sum())
+            n_pack = int((newly_dead & keep_own).sum())
+            if n_vote:
+                metrics.counter("spls/horizon_finalized_cols").inc(n_vote)
+            if n_pack:
+                metrics.counter(
+                    "spls/horizon_kv_capacity_drops").inc(n_pack)
         live[own] &= written
         return live
     cur = start // chunk
     elapsed = cur - sl // chunk + 1
     dead = (live & ~kept_by_vote & (sl < start + valid)
             & (elapsed >= horizon) & (sl != last_keep))
+    if metrics is not None:
+        n_dead = int(dead.sum())
+        if n_dead:
+            metrics.counter("spls/horizon_finalized_cols").inc(n_dead)
     live[dead] = False
     return live
 

@@ -46,7 +46,8 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["gathered_matmul", "gather_rows_kernel"]
 
 
-def _gmm_kernel(perm_ref, x_hbm, w_ref, o_ref, xs, sem, *, bm, bk):
+def _gmm_kernel(perm_ref, x_hbm, w_ref, o_ref, xs, sem, *, bm, bk,
+                double_buffer):
     i = pl.program_id(0)
     j = pl.program_id(1)
     k = pl.program_id(2)
@@ -69,17 +70,30 @@ def _gmm_kernel(perm_ref, x_hbm, w_ref, o_ref, xs, sem, *, bm, bk):
             return pltpu.make_async_copy(x_hbm.at[src], xs.at[r],
                                          sem.at[slot])
 
-        dma(0, 0).start()
+        if double_buffer:
+            dma(0, 0).start()
 
-        def body(r, carry):
-            @pl.when(r + 1 < bm)
-            def _start_next():
-                dma(r + 1, (r + 1) % 2).start()
+            def body(r, carry):
+                @pl.when(r + 1 < bm)
+                def _start_next():
+                    dma(r + 1, (r + 1) % 2).start()
 
-            dma(r, r % 2).wait()
-            return carry
+                dma(r, r % 2).wait()
+                return carry
 
-        jax.lax.fori_loop(0, bm, body, 0)
+            jax.lax.fori_loop(0, bm, body, 0)
+        else:
+            # serialized baseline (bench_kernels times it against the
+            # buffered schedule): each row's copy fully completes before
+            # the next is issued, so no DMA is ever in flight behind a
+            # wait -- same destinations, bitwise-identical panel
+            def body_serial(r, carry):
+                d = dma(r, 0)
+                d.start()
+                d.wait()
+                return carry
+
+            jax.lax.fori_loop(0, bm, body_serial, 0)
 
     @pl.when(k == 0)
     def _init():
@@ -90,10 +104,12 @@ def _gmm_kernel(perm_ref, x_hbm, w_ref, o_ref, xs, sem, *, bm, bk):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bm", "bn", "bk", "interpret"))
+                   static_argnames=("bm", "bn", "bk", "interpret",
+                                    "double_buffer"))
 def _gathered_matmul_padded(x: jax.Array, w: jax.Array, perm: jax.Array,
                             bm: int, bn: int, bk: int,
-                            interpret: bool) -> jax.Array:
+                            interpret: bool,
+                            double_buffer: bool = True) -> jax.Array:
     C = perm.shape[0]
     _, D = x.shape
     _, F = w.shape
@@ -111,7 +127,8 @@ def _gathered_matmul_padded(x: jax.Array, w: jax.Array, perm: jax.Array,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_gmm_kernel, bm=bm, bk=bk),
+        functools.partial(_gmm_kernel, bm=bm, bk=bk,
+                          double_buffer=double_buffer),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((C, F), jnp.float32),
         interpret=interpret,
@@ -121,7 +138,8 @@ def _gathered_matmul_padded(x: jax.Array, w: jax.Array, perm: jax.Array,
 def gathered_matmul(x: jax.Array, w: jax.Array, perm: jax.Array,
                     src_slot: Optional[jax.Array] = None,
                     bm: int = 128, bn: int = 128, bk: Optional[int] = None,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool = True,
+                    double_buffer: bool = True) -> jax.Array:
     """``x[perm] @ w`` with the gather fused into the matmul DMA schedule.
 
     x: (L, D) source rows; w: (D, F); perm: (C,) int32 packed row indices
@@ -134,6 +152,13 @@ def gathered_matmul(x: jax.Array, w: jax.Array, perm: jax.Array,
     computed wastefully and sliced off -- the same discipline as the
     capacity pack).  ``bk=None`` runs the whole contraction per tile:
     bitwise equal to the XLA oracle; see module docstring.
+
+    ``double_buffer=False`` serializes the row gather (start+wait per
+    row, no overlap) -- bitwise identical, kept as the timing baseline
+    that isolates what the two-semaphore pipeline buys
+    (``benchmarks/bench_kernels.py`` times both; the dispatch carries a
+    ``jax.profiler.TraceAnnotation`` so on-TPU profiles name the
+    variant).
     """
     L, D = x.shape
     D2, F = w.shape
@@ -149,10 +174,16 @@ def gathered_matmul(x: jax.Array, w: jax.Array, perm: jax.Array,
     pf = (-F) % bn
     if pf:
         w = jnp.pad(w, ((0, 0), (0, pf)))
-    out = _gathered_matmul_padded(x.astype(jnp.float32),
-                                  w.astype(jnp.float32),
-                                  perm.astype(jnp.int32),
-                                  bm, bn, bk, interpret)
+    # named profiler annotation: on-TPU traces (and Perfetto exports of
+    # jax.profiler captures) attribute the dispatch to the exact gather
+    # schedule being measured
+    variant = "buffered" if double_buffer else "serialized"
+    with jax.profiler.TraceAnnotation(f"gathered_matmul/{variant}"):
+        out = _gathered_matmul_padded(x.astype(jnp.float32),
+                                      w.astype(jnp.float32),
+                                      perm.astype(jnp.int32),
+                                      bm, bn, bk, interpret,
+                                      double_buffer=double_buffer)
     out = out[:C, :F]
     if src_slot is not None:
         out = gather_rows_kernel(out, src_slot, interpret=interpret)

@@ -1,0 +1,10 @@
+"""``python -m repro.observability <BENCH_serving.json>`` -- validate a
+serving report against the current schema (delegates to
+:mod:`repro.observability.report`)."""
+
+import sys
+
+from .report import main
+
+if __name__ == "__main__":
+    sys.exit(main())

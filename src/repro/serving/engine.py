@@ -34,6 +34,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import decode_step, init_cache, prefill
 from repro.models.attn_backend import AUTO
+from repro.observability import Telemetry, tree_bytes
 from repro.sparse_compute import (CapacityController, chunk_flops, is_packed,
                                   resolve_compute_backend)
 
@@ -104,6 +105,14 @@ class ServeConfig:
     # -- the chunk's own plan votes land before formal QKV generation,
     # so pruned columns are never projected at all.
     vote_horizon: Optional[int] = None
+    # serving telemetry (repro.observability): per-request lifecycle
+    # spans, TTFT/TPOT histograms, SPLS sparsity instruments, and the
+    # BENCH_serving.json report.  Default-on; False swaps in no-op sinks
+    # that record nothing (the back-compat `stats` counters stay live
+    # either way -- they are engine state, not diagnostics).  All
+    # instruments are host-side with injected monotonic timestamps;
+    # greedy outputs are bit-for-bit identical on and off.
+    telemetry: bool = True
 
 
 def _backend_for_site(name: Optional[str], *, decode: bool,
@@ -179,6 +188,7 @@ class ServingEngine(_SamplerMixin):
                 scfg.attn_backend, decode=True))
         self.cfg, self.params = cfg, params
         self._init_sampler(scfg)
+        self.telemetry = Telemetry(enabled=scfg.telemetry)
         self.queue: deque = deque()
         self.slots: List[Optional[Request]] = [None] * scfg.n_slots
         self.pos = jnp.zeros((scfg.n_slots,), jnp.int32)
@@ -196,7 +206,17 @@ class ServingEngine(_SamplerMixin):
                                     plan_mode=plan_mode))
 
     # ------------------------------------------------------------------
+    @property
+    def stats(self) -> dict:
+        """Minimal stats view (the paged engine carries the full set);
+        dense compute executes everything, so savings are all zero."""
+        return {"retired": len(self._retired),
+                "compute_backend": "dense",
+                "flops_saved_pct": {}}
+
     def submit(self, req: Request) -> None:
+        self.telemetry.request_submitted(req.rid,
+                                         int(req.prompt.shape[0]))
         self.queue.append(req)
 
     def _admit(self) -> None:
@@ -205,7 +225,9 @@ class ServingEngine(_SamplerMixin):
             if self.slots[s] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
+            self.telemetry.request_admitted(req.rid)
             lp = int(req.prompt.shape[0])
+            self.telemetry.span_begin("full_prefill", rid=req.rid)
             logits, cache1 = self._prefill(self.params,
                                            req.prompt[None, :])
             # splice this row's prefilled cache into slot s
@@ -214,6 +236,8 @@ class ServingEngine(_SamplerMixin):
                 self.cache, cache1)
             nxt = int(self._pick(logits[0, -1]))
             req.output.append(nxt)
+            self.telemetry.span_end("full_prefill", rid=req.rid)
+            self.telemetry.first_token(req.rid)
             self.slots[s] = req
             self.pos = self.pos.at[s].set(lp)
             self.tokens = self.tokens.at[s, 0].set(nxt)
@@ -228,6 +252,7 @@ class ServingEngine(_SamplerMixin):
                 req.done = True
                 self.slots[s] = None
                 self._retired.append(req)
+                self.telemetry.request_retired(req.rid)
 
     def tick(self) -> int:
         """One engine iteration; returns number of active slots decoded."""
@@ -236,12 +261,17 @@ class ServingEngine(_SamplerMixin):
         active = [s for s, r in enumerate(self.slots) if r is not None]
         if not active:
             return 0
+        self.telemetry.span_begin("decode_tick",
+                                  args={"n_active": len(active)})
         logits, self.cache = self._decode(self.params, self.cache,
                                           self.tokens, self.pos)
         nxt = self._pick(logits[:, 0])
         for s in active:
             tok = int(nxt[s])
             self.slots[s].output.append(tok)
+        self.telemetry.span_end("decode_tick")
+        self.telemetry.tokens_decoded(
+            [self.slots[s].rid for s in active])
         self.pos = self.pos + jnp.asarray(
             [1 if self.slots[s] is not None else 0
              for s in range(self.scfg.n_slots)], jnp.int32)
@@ -353,6 +383,7 @@ class PagedServingEngine(_SamplerMixin):
                 if self._horizon == 1 else None)
         else:
             self._cap_q = self._cap_f = self._cap_kv = None
+        self.telemetry = Telemetry(enabled=scfg.telemetry)
         self.sched = Scheduler(
             SchedulerConfig(n_slots=scfg.n_slots,
                             prefill_chunk=scfg.prefill_chunk,
@@ -363,7 +394,8 @@ class PagedServingEngine(_SamplerMixin):
             # packed compute: route whole prompts (<= one chunk) through
             # the chunk path too, so short prompts get token compaction
             # instead of silently running the dense full-prefill path
-            chunk_all=is_packed(self._compute))
+            chunk_all=is_packed(self._compute),
+            telemetry=self.telemetry)
 
         self.cache = init_paged_cache(cfg, n_pages, ps)
         self.pos_pages = init_pos_pages(n_pages, ps)
@@ -396,6 +428,9 @@ class PagedServingEngine(_SamplerMixin):
         self._compact = jax.jit(
             lambda c, pp, tb, keep: compact_slots(c, pp, tb, keep),
             donate_argnums=(0, 1))
+        # pool byte gauges (metadata only, no device sync); the predictor
+        # cache gauge updates when its lazy allocation lands
+        self.telemetry.sparsity.note_pool_bytes(tree_bytes(self.cache))
 
     def _get_chunk_spls(self, cq: Optional[int], cf: Optional[int],
                         ckv: Optional[int] = None, horizon: bool = False):
@@ -433,17 +468,21 @@ class PagedServingEngine(_SamplerMixin):
     # ------------------------------------------------------------------
     @property
     def stats(self) -> dict:
+        """Back-compat dict view over the typed instruments: the
+        scheduler counters (live ``CounterDictView``), pool gauges, and
+        capacity-controller snapshots, assembled fresh per read."""
         out = {**self.sched.stats,
                "pages_in_use": self.pool.pages_in_use,
                "peak_pages": self.pool.peak_in_use,
                "free_pages": self.pool.free_pages,
+               "guard_trips": self.pool.guard_trips,
                "compute_backend": self._compute,
                "flops_saved_pct": self.sched.flops_saved_pct()}
         if self._cap_q is not None:
-            out["capacity_q"] = dict(self._cap_q.stats)
-            out["capacity_ffn"] = dict(self._cap_f.stats)
+            out["capacity_q"] = self._cap_q.snapshot()
+            out["capacity_ffn"] = self._cap_f.snapshot()
         if self._cap_kv is not None:
-            out["capacity_kv"] = dict(self._cap_kv.stats)
+            out["capacity_kv"] = self._cap_kv.snapshot()
         return out
 
     def submit(self, req: Request) -> None:
@@ -453,6 +492,9 @@ class PagedServingEngine(_SamplerMixin):
                              f"max_len {self.scfg.max_len}")
         self.sched.submit(req, [int(t) for t in np.asarray(req.prompt)],
                           req.max_new_tokens)
+        # recorded only once the scheduler accepted it (a rejected
+        # request would leave an unclosed lifecycle span)
+        self.telemetry.request_submitted(req.rid, lp)
 
     # ------------------------------------------------------------------
     def _dest_slots(self, st: SeqState, n: int) -> np.ndarray:
@@ -468,6 +510,9 @@ class PagedServingEngine(_SamplerMixin):
         return row
 
     def _full_prefill(self, st: SeqState) -> None:
+        tel = self.telemetry
+        tel.span_begin("full_prefill", rid=st.req.rid,
+                       args={"prompt_len": st.prompt_len})
         toks = jnp.asarray(st.tokens, jnp.int32)[None, :]
         logits, dense_cache = self._prefill(self.params, toks)
         if self._prune:
@@ -479,7 +524,9 @@ class PagedServingEngine(_SamplerMixin):
         keep_idx = np.nonzero(keep)[0]
         n_kept = len(keep_idx)
         if not self.sched.grow_to(st, n_kept):
-            return  # st itself was preempted; prefill recomputes later
+            # st itself was preempted (span unwound by the preempt/abort
+            # telemetry); prefill recomputes later
+            return
         dest = self._dest_slots(st, n_kept)
         self.cache, self.pos_pages = scatter_prefill(
             self.cache, self.pos_pages, dense_cache,
@@ -493,15 +540,21 @@ class PagedServingEngine(_SamplerMixin):
                                           st.prompt_len))
         if self._prune:
             self.sched.note_prune(st.prompt_len, n_kept)
+            tel.sparsity.note_prune(st.prompt_len, n_kept)
+        tel.span_end("full_prefill", rid=st.req.rid,
+                     args={"kept": n_kept})
         self._emit_first(st, logits[0, -1])
 
     def _chunk_prefill(self, st: SeqState) -> None:
+        tel = self.telemetry
         cs = self.sched.cfg.prefill_chunk
         start = st.prefilled                 # == st.kv_len (columns stay
         #                          dense until the end-of-prefill compaction)
         valid = min(cs, st.prompt_len - start)
         if not self.sched.grow_to(st, start + valid):
-            return
+            return   # preempted/aborted; telemetry unwound the track
+        tel.span_begin("prefill_chunk", rid=st.req.rid,
+                       args={"start": start, "valid": valid})
         chunk = np.zeros((cs,), np.int32)
         chunk[:valid] = st.tokens[start:start + valid]
         if self.cfg.spls.enabled:
@@ -510,6 +563,8 @@ class PagedServingEngine(_SamplerMixin):
             if self.pred_cache is None:
                 self.pred_cache = init_pred_cache(self.cfg, self._n_pages,
                                                   self.page_size)
+                tel.sparsity.note_pool_bytes(tree_bytes(self.cache),
+                                             tree_bytes(self.pred_cache))
             k = topk_count(st.prompt_len, self.cfg.spls.k_ratio)
             packed = self._cap_q is not None
             cq = self._cap_q.capacity() if packed else None
@@ -548,7 +603,7 @@ class PagedServingEngine(_SamplerMixin):
                     st.live, st.head_votes.sum(axis=0), start=start,
                     valid=valid, chunk=cs, horizon=horizon,
                     last_keep=last_keep, vote_need=self._vote_need,
-                    kv_capacity=ckv)
+                    kv_capacity=ckv, metrics=tel.metrics)
             if packed:
                 # the host readback of the critical counts syncs on the
                 # chunk step; only the packed path pays it (dense compute
@@ -558,14 +613,17 @@ class PagedServingEngine(_SamplerMixin):
                 self._cap_q.observe(n_q)
                 if n_q > cq:
                     self._cap_q.note_overflow()
+                tel.sparsity.note_capacity("q", cq, n_q, n_q > cq)
                 if self.cfg.spls.ffn_sparsity:
                     self._cap_f.observe(n_f)
                     if n_f > cf:
                         self._cap_f.note_overflow()
+                    tel.sparsity.note_capacity("ffn", cf, n_f, n_f > cf)
                 if ckv is not None:
                     self._cap_kv.observe(n_kv)
                     if n_kv > ckv:
                         self._cap_kv.note_overflow()
+                    tel.sparsity.note_capacity("kv", ckv, n_kv, n_kv > ckv)
             self.sched.note_flops(chunk_flops(
                 self.cfg, cs, start + valid, q_rows=cq, ffn_rows=cf,
                 kv_rows=ckv))
@@ -580,6 +638,7 @@ class PagedServingEngine(_SamplerMixin):
         st.kv_len += valid
         st.cur_pos += valid
         self.sched.stats["prefill_chunks"] += 1
+        tel.span_end("prefill_chunk", rid=st.req.rid)
         if st.phase == "decode":
             if self._prune and self.cfg.spls.enabled:
                 self._finish_chunk_prune(st)
@@ -592,8 +651,11 @@ class PagedServingEngine(_SamplerMixin):
         votes, compact kept columns -- in original order, the same layout
         ``scatter_prefill`` produces -- into the front of the sequence's
         own pages, and free the tail."""
+        tel = self.telemetry
+        tel.span_begin("prune_compact", rid=st.req.rid)
         Lp = st.prompt_len
         S = self.pages_per_seq * self.page_size
+        tel.sparsity.note_votes(st.head_votes[:, :Lp])
         votes = st.head_votes.sum(axis=0).astype(np.int32)
         keep = keep_from_votes(votes[:Lp], self.cfg.n_heads,
                                self.scfg.spls_prune_vote)
@@ -616,11 +678,15 @@ class PagedServingEngine(_SamplerMixin):
         st.kv_len = n_kept
         st.head_votes = None
         self.sched.note_prune(Lp, n_kept)
+        tel.sparsity.note_prune(Lp, n_kept)
+        tel.span_end("prune_compact", rid=st.req.rid,
+                     args={"kept": n_kept, "prompt_len": Lp})
 
     def _emit_first(self, st: SeqState, logits_row: jax.Array) -> None:
         tok = int(self._pick(logits_row))
         st.req.output.append(tok)
         st.budget -= 1
+        self.telemetry.first_token(st.req.rid)
 
     # ------------------------------------------------------------------
     def tick(self) -> int:
@@ -646,6 +712,8 @@ class PagedServingEngine(_SamplerMixin):
 
         n_decoded = 0
         if active:
+            self.telemetry.span_begin("decode_tick",
+                                      args={"n_active": len(active)})
             n_slots = self.scfg.n_slots
             tables = np.full((n_slots, self.pages_per_seq), NULL_PAGE,
                              np.int32)
@@ -668,8 +736,12 @@ class PagedServingEngine(_SamplerMixin):
                 st.cur_pos += 1
                 st.budget -= 1
             n_decoded = len(active)
+            self.telemetry.span_end("decode_tick")
+            self.telemetry.tokens_decoded([st.req.rid for st in active])
 
         self._retire_finished()
+        # sample after retirement so a drained pool reads 0 in the gauge
+        self.telemetry.sparsity.observe_pool(self.pool)
         return n_decoded
 
     def _retire_finished(self) -> None:
@@ -678,6 +750,7 @@ class PagedServingEngine(_SamplerMixin):
         for req in self.sched.aborted:
             req.done = True
             self._retired.append(req)
+            self.telemetry.request_aborted(req.rid)
         self.sched.aborted.clear()
         for st in list(self.sched.active()):
             req = st.req
@@ -688,6 +761,7 @@ class PagedServingEngine(_SamplerMixin):
                 req.done = True
                 self.sched.retire(st)
                 self._retired.append(req)
+                self.telemetry.request_retired(req.rid)
 
     def run_until_drained(self, max_ticks: int = 10000) -> List[Request]:
         """Tick until everything drains; returns the requests retired

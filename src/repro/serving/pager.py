@@ -92,6 +92,10 @@ class PagePool:
         self._free: deque = deque(range(1, n_pages))
         self._allocated: set = set()
         self.peak_in_use = 0
+        # double-free / foreign-free guard trips (the raise below): a
+        # plain counter so telemetry can surface trips even when the
+        # caller swallows the exception
+        self.guard_trips = 0
 
     # ------------------------------------------------------------------
     @property
@@ -130,6 +134,7 @@ class PagePool:
         """
         for p in pages:
             if p not in self._allocated:
+                self.guard_trips += 1
                 raise ValueError(
                     f"page {p} is not currently allocated "
                     f"({'null page' if p == NULL_PAGE else 'double-free or foreign page'}); "

@@ -34,9 +34,15 @@ import math
 from collections import deque
 from typing import List, Optional
 
+from repro.observability import CounterDictView, Telemetry
+from repro.sparse_compute.accounting import saved_pct
+
 from .pager import PagePool
 
 __all__ = ["SchedulerConfig", "SeqState", "Scheduler"]
+
+_STAT_KEYS = ("admitted", "preemptions", "retired", "prefill_chunks",
+              "aborted")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,9 +90,15 @@ class SeqState:
 class Scheduler:
     def __init__(self, cfg: SchedulerConfig, pool: PagePool,
                  max_len: int, chunkable: bool = True,
-                 prune_aware: bool = False, chunk_all: bool = False):
+                 prune_aware: bool = False, chunk_all: bool = False,
+                 telemetry: Optional[Telemetry] = None):
         self.cfg = cfg
         self.pool = pool
+        # the engine threads its telemetry in; a bare scheduler gets a
+        # disabled one (back-compat counters still work -- they live on
+        # the always-on core registry, not behind the knob)
+        self.tel = telemetry if telemetry is not None \
+            else Telemetry(enabled=False)
         self.max_len = max_len
         # chunked prefill needs causal cross-chunk attention; the engine
         # disables it for non-causal models (SPLS configs now stream their
@@ -110,8 +122,10 @@ class Scheduler:
         self.aborted: List = []         # optimistically admitted, never fit
         self._solo_preempts: dict = {}  # rid -> self-preemption count
         self._admit_seq = 0
-        self.stats = {"admitted": 0, "preemptions": 0, "retired": 0,
-                      "prefill_chunks": 0, "aborted": 0}
+        # typed Counter instruments on the telemetry's always-on core
+        # registry, behind a dict-shaped live view so legacy
+        # `stats["k"] += 1` call sites and test assertions keep working
+        self.stats = CounterDictView(self.tel.core, "sched/", _STAT_KEYS)
         # lifetime FLOPs accounting: [dense-equivalent, executed] per
         # component, accumulated over every prefill the engine runs --
         # the measured realization of the paper's Fig. 15 breakdown on
@@ -132,8 +146,7 @@ class Scheduler:
     def flops_saved_pct(self) -> dict:
         """Lifetime percent of dense-equivalent FLOPs *not* executed,
         per component (0.0 before any prefill ran)."""
-        return {c: (100.0 * (1.0 - e / d) if d > 0 else 0.0)
-                for c, (d, e) in self.flops.items()}
+        return saved_pct(self.flops)
 
     def note_prune(self, prompt_len: int, kept: int) -> None:
         """Record an observed post-prune keep ratio (engine calls this
@@ -210,6 +223,7 @@ class Scheduler:
             self._admit_seq += 1
             self.slots[slot] = st
             self.stats["admitted"] += 1
+            self.tel.request_admitted(req.rid)
             admitted.append(st)
         return admitted
 
@@ -283,6 +297,7 @@ class Scheduler:
         budget = st.req.max_new_tokens - len(st.req.output)
         self.waiting.appendleft((st.req, st.base_prompt, tokens, budget))
         self.stats["preemptions"] += 1
+        self.tel.request_preempted(st.req.rid)
 
     def retire(self, st: SeqState) -> None:
         self.pool.free(st.pages)

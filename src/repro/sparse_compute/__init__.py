@@ -26,7 +26,7 @@ The plan->compaction adapters live in :mod:`repro.core.sparse_exec`
 (:class:`~repro.core.sparse_exec.Compaction`, ``compact_rows``).
 """
 
-from .accounting import chunk_flops
+from .accounting import chunk_flops, saved_pct
 from .backend import (AUTO, DENSE, available_compute_backends,
                       get_compute_backend, is_packed,
                       register_compute_backend, resolve_compute_backend)
@@ -37,4 +37,5 @@ __all__ = [
     "AUTO", "DENSE", "available_compute_backends", "get_compute_backend",
     "is_packed", "register_compute_backend", "resolve_compute_backend",
     "CapacityController", "packed_mlp", "packed_project_q", "chunk_flops",
+    "saved_pct",
 ]

@@ -24,11 +24,23 @@ Serving-specific honesty notes:
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Iterable, Optional, Tuple
 
 from repro.models.common import Activations
 
-__all__ = ["chunk_flops"]
+__all__ = ["chunk_flops", "saved_pct"]
+
+
+def saved_pct(acc: Dict[str, Iterable[float]]) -> Dict[str, float]:
+    """Percent of dense-equivalent FLOPs *not* executed, per component,
+    from a ``{component: (dense_total, executed_total)}`` accumulator
+    (the scheduler's lifetime shape; 0.0 for components never run).
+    Shared by ``Scheduler.flops_saved_pct`` and the telemetry report so
+    every surface derives the number one way."""
+    out = {}
+    for c, (dense, executed) in acc.items():
+        out[c] = 100.0 * (1.0 - executed / dense) if dense > 0 else 0.0
+    return out
 
 
 def chunk_flops(cfg, rows: int, cols: int, q_rows: Optional[int] = None,

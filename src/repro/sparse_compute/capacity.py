@@ -80,3 +80,25 @@ class CapacityController:
             pick = next((b for b in self.buckets if b >= need), self.total)
         self.stats["picks"][pick] = self.stats["picks"].get(pick, 0) + 1
         return pick
+
+    @property
+    def overflow_rate(self) -> float:
+        """Fraction of observed chunks that overflowed their bucket into
+        the window-leader fallback (0.0 before any observation)."""
+        obs = self.stats["observations"]
+        return self.stats["overflows"] / obs if obs else 0.0
+
+    def snapshot(self) -> dict:
+        """Telemetry view: the raw stats plus the live EMA estimate, the
+        overflow-fallback rate, and the mean bucket occupancy (picked
+        slots actually demanded, weighted by picks)."""
+        picks = dict(self.stats["picks"])
+        n_picks = sum(picks.values())
+        mean_bucket = (sum(b * n for b, n in picks.items()) / n_picks
+                       if n_picks else float(self.total))
+        return {**self.stats, "picks": picks, "estimate": self._est,
+                "overflow_rate": self.overflow_rate,
+                "mean_bucket": mean_bucket,
+                "occupancy": (self._est / mean_bucket
+                              if self._est is not None and mean_bucket
+                              else None)}
